@@ -1,0 +1,27 @@
+"""Embed the generated roofline markdown tables into EXPERIMENTS.md."""
+import io
+import re
+import sys
+from contextlib import redirect_stdout
+
+from benchmarks import roofline_md
+
+
+def main():
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        for p in ("dryrun_1pod.json", "dryrun_2pod.json"):
+            roofline_md.emit(p)
+    tables = buf.getvalue()
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    marker = "<!-- ROOFLINE_TABLES -->"
+    start = text.index(marker)
+    end = text.index("### Reading of the baseline table")
+    text = text[:start] + marker + "\n" + tables + "\n" + text[end:]
+    open(path, "w").write(text)
+    print("embedded roofline tables into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Render dryrun_*.json into the EXPERIMENTS.md roofline markdown tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_md [dryrun_1pod.json ...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(x):
+    if x is None:
+        return "?"
+    for u in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{u}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def emit(path: str) -> None:
+    rows = json.load(open(path))
+    chips = 512 if rows and rows[0]["multi_pod"] else 256
+    print(f"\n### {path}  ({chips} chips)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+          "bound_s | args/dev | temp/dev | MODEL_F/HLO_F | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] == "skip":
+            print(f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | - "
+                  f"| - | skip: {r['reason']} |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | - "
+                  f"| - | **FAIL** {r.get('error', '')[:60]} |")
+            continue
+        rl = r["roofline"]
+        mf = r["model_flops_6nd"] / chips / max(rl["flops_per_dev"], 1e-9)
+        mem = r["memory"]
+        note = r.get("optimizer", "")
+        if r.get("microbatches"):
+            note += f" mb={r['microbatches']}"
+        print(f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4f} | "
+              f"{rl['memory_s']:.4f} | {rl['collective_s']:.4f} | "
+              f"{rl['dominant']} | {rl['bound_s']:.4f} | "
+              f"{fmt_bytes(mem['argument_bytes'])} | "
+              f"{fmt_bytes(mem['temp_bytes'])} | {mf:.2f} | {note} |")
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:] or ("dryrun_1pod.json", "dryrun_2pod.json"):
+        emit(p)

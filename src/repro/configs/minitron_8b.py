@@ -1,0 +1,9 @@
+"""Minitron 8B: width-pruned Nemotron-4.  [arXiv:2407.14679]"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minitron-8b", arch_type="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=16384, vocab=256000, head_dim=128,
+    source="arXiv:2407.14679",
+)

@@ -1,0 +1,2 @@
+"""Core BiCompFL machinery: MRC codec, quantizers, block allocation, bits."""
+from . import bernoulli, bitmeter, blocks, mrc, quantizers  # noqa: F401

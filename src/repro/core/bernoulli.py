@@ -1,0 +1,58 @@
+"""Bernoulli-distribution utilities shared across the BiCompFL stack.
+
+Everything operates on *parameter* vectors/matrices theta in [0, 1]; a model
+of dimension d is a vector of d independent Bernoulli parameters (FedPM-style
+probabilistic masks), or -- in the CFL path -- the success probabilities
+produced by a stochastic quantizer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Numerical floor keeping log-ratios finite. The paper's Theorem 1 assumes
+# p_j > zeta; operationally we clip all Bernoulli parameters to [EPS, 1-EPS].
+EPS = 1e-6
+
+
+def clip01(x: jax.Array) -> jax.Array:
+    """Clip a Bernoulli parameter into the open interval (0, 1)."""
+    return jnp.clip(x, EPS, 1.0 - EPS)
+
+
+def bern_kl(q: jax.Array, p: jax.Array) -> jax.Array:
+    """Elementwise d_KL(q || p) between Bernoulli parameters (natural log)."""
+    q = clip01(q)
+    p = clip01(p)
+    return q * jnp.log(q / p) + (1.0 - q) * jnp.log((1.0 - q) / (1.0 - p))
+
+
+def bern_kl_bits(q: jax.Array, p: jax.Array) -> jax.Array:
+    """Elementwise KL in bits (the unit the MRC cost model uses)."""
+    return bern_kl(q, p) / jnp.log(2.0)
+
+
+def log_ratio_coeffs(q: jax.Array, p: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Coefficients (a, b) such that, for a candidate x in {0,1}^d,
+
+        log (Q(x)/P(x)) = sum_e  x_e * a_e + b_e
+
+    with a = log(q/p) - log((1-q)/(1-p)) and b = log((1-q)/(1-p)).
+    This turns MRC importance-weight evaluation into a matvec X @ a + sum(b),
+    which is what the Pallas kernel accelerates on the MXU.
+    """
+    q = clip01(q)
+    p = clip01(p)
+    llr1 = jnp.log(q) - jnp.log(p)
+    llr0 = jnp.log1p(-q) - jnp.log1p(-p)
+    return llr1 - llr0, llr0
+
+
+def sigmoid(x: jax.Array) -> jax.Array:
+    return jax.nn.sigmoid(x)
+
+
+def inv_sigmoid(theta: jax.Array) -> jax.Array:
+    """Map primal Bernoulli parameters to dual-space scores (mirror map)."""
+    theta = clip01(theta)
+    return jnp.log(theta) - jnp.log1p(-theta)

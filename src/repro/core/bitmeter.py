@@ -1,0 +1,80 @@
+"""Communication accounting (bits, bpp) for all schemes.
+
+Conventions follow the paper's tables (Appendix I):
+
+* bpp columns are *per client, per parameter, per global round*;
+* total bpp = uplink + downlink;
+* bpp (BC): when a broadcast downlink exists, the downlink of every scheme
+  whose downlink payload is identical for all clients is divided by n
+  (BiCompFL-PR cannot profit -- its downlink is client-specific).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class BitMeter:
+    """Accumulates uplink/downlink bits over rounds for one scheme."""
+
+    n_clients: int
+    d: int
+    broadcast_downlink_shareable: bool = True  # False for PR-style downlinks
+    uplink_bits: float = 0.0    # summed over clients and rounds
+    downlink_bits: float = 0.0  # summed over clients and rounds
+    rounds: int = 0
+    history: List[Dict[str, float]] = field(default_factory=list)
+
+    def add_round(self, uplink_bits_total: float, downlink_bits_total: float,
+                  overhead_bits: float = 0.0) -> None:
+        """Book one global round. Totals are summed across clients."""
+        self.uplink_bits += uplink_bits_total + overhead_bits
+        self.downlink_bits += downlink_bits_total
+        self.rounds += 1
+        self.history.append({
+            "round": self.rounds,
+            "uplink_bits": uplink_bits_total + overhead_bits,
+            "downlink_bits": downlink_bits_total,
+            "cum_bits": self.uplink_bits + self.downlink_bits,
+        })
+
+    # --- per-client per-param per-round averages (the table columns) -----
+    def _per(self, bits: float) -> float:
+        if self.rounds == 0:
+            return 0.0
+        return bits / (self.n_clients * self.d * self.rounds)
+
+    @property
+    def uplink_bpp(self) -> float:
+        return self._per(self.uplink_bits)
+
+    @property
+    def downlink_bpp(self) -> float:
+        return self._per(self.downlink_bits)
+
+    @property
+    def total_bpp(self) -> float:
+        return self.uplink_bpp + self.downlink_bpp
+
+    @property
+    def total_bpp_bc(self) -> float:
+        """Total bpp when a broadcast downlink channel is available."""
+        dl = self.downlink_bpp
+        if self.broadcast_downlink_shareable:
+            dl = dl / self.n_clients
+        return self.uplink_bpp + dl
+
+    @property
+    def total_bits(self) -> float:
+        return self.uplink_bits + self.downlink_bits
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "bpp": self.total_bpp,
+            "bpp_bc": self.total_bpp_bc,
+            "uplink_bpp": self.uplink_bpp,
+            "downlink_bpp": self.downlink_bpp,
+            "total_bits": self.total_bits,
+            "rounds": self.rounds,
+        }

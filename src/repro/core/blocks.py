@@ -1,0 +1,111 @@
+"""Block-allocation strategies for MRC (paper Section 3 / Appendix E).
+
+* ``FixedAllocation``       -- constant block size d/B across rounds.
+* ``AdaptiveAvgAllocation`` -- the paper's low-complexity proposal: keep equal
+  block sizes but re-optimize the (single) size each round so that the
+  *average* KL per block tracks the target log(n_is); only one size needs to
+  be transmitted (log2(b_max) bits when it changes).
+* ``AdaptiveAllocation``    -- Isik et al. (2024): variable block boundaries
+  with (approximately) equal KL mass per block; boundaries are transmitted.
+
+To keep JIT shapes static, adaptive sizes are quantized to powers of two in
+[min_block, max_block]; AdaptiveAllocation represents boundaries through a
+segment-id vector with a static maximum number of segments.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from .bernoulli import bern_kl
+
+
+def _pad_to(d: int, block: int) -> int:
+    return -(-d // block) * block
+
+
+@dataclass
+class FixedAllocation:
+    block_size: int = 256
+
+    name = "Fixed"
+
+    def blocks_for(self, d: int) -> int:
+        return _pad_to(d, self.block_size) // self.block_size
+
+    def plan(self, kl_per_param: Optional[np.ndarray], d: int):
+        """Return (block_size, n_blocks, seg_ids=None, overhead_bits)."""
+        return self.block_size, self.blocks_for(d), None, 0.0
+
+
+@dataclass
+class AdaptiveAvgAllocation:
+    """Equal-size blocks, size re-tuned each round from the average KL.
+
+    Target: per-block KL (in nats) ~ target_ratio * log(n_is); block sizes
+    are powers of two in [min_block, max_block]. The size update costs
+    log2(log2(max_block)) ~ a few bits; we book ceil(log2(max_block)) bits.
+    """
+
+    n_is: int = 256
+    target_ratio: float = 1.0
+    min_block: int = 32
+    max_block: int = 4096
+
+    name = "Adaptive-Avg"
+
+    def plan(self, kl_per_param: Optional[np.ndarray], d: int):
+        if kl_per_param is None:
+            size = self.min_block * 8
+        else:
+            mean_kl = float(np.mean(kl_per_param)) + 1e-12
+            target = self.target_ratio * math.log(self.n_is)
+            size = target / mean_kl
+        size = 2 ** int(np.clip(np.round(np.log2(max(size, 1))),
+                                math.log2(self.min_block), math.log2(self.max_block)))
+        n_blocks = _pad_to(d, size) // size
+        return size, n_blocks, None, math.ceil(math.log2(self.max_block))
+
+
+@dataclass
+class AdaptiveAllocation:
+    """Variable boundaries with equal KL mass per block (Isik et al. 2024).
+
+    Number of blocks B is chosen so that total KL / B ~ log(n_is); boundaries
+    are found by cumulative-KL binning. Overhead: B * ceil(log2(max_block))
+    bits to transmit the block intervals (paper, Appendix E).
+    """
+
+    n_is: int = 256
+    target_ratio: float = 1.0
+    min_blocks: int = 4
+    max_block: int = 4096
+
+    name = "Adaptive"
+
+    def plan(self, kl_per_param: Optional[np.ndarray], d: int):
+        if kl_per_param is None:
+            # Cold start: fall back to fixed 256-size blocks.
+            size = 256
+            n_blocks = _pad_to(d, size) // size
+            seg = np.minimum(np.arange(d) // size, n_blocks - 1)
+            return None, n_blocks, seg.astype(np.int32), 0.0
+        total = float(np.sum(kl_per_param)) + 1e-12
+        target = self.target_ratio * math.log(self.n_is)
+        n_blocks = max(self.min_blocks, int(math.ceil(total / target)))
+        n_blocks = min(n_blocks, max(self.min_blocks, d // 8))
+        cum = np.cumsum(np.asarray(kl_per_param, dtype=np.float64))
+        # boundary so each block holds ~ total/n_blocks KL mass
+        edges = np.searchsorted(cum, np.linspace(0, total, n_blocks + 1)[1:-1])
+        seg = np.zeros(d, dtype=np.int32)
+        seg[edges] += 1
+        seg = np.cumsum(seg).astype(np.int32)
+        overhead = n_blocks * math.ceil(math.log2(self.max_block))
+        return None, int(seg.max()) + 1, seg, float(overhead)
+
+
+def kl_per_param(q, p) -> np.ndarray:
+    return np.asarray(bern_kl(q, p))

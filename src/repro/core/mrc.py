@@ -1,0 +1,254 @@
+"""Minimal Random Coding (MRC) with shared randomness -- the paper's C_mrc.
+
+Two parties hold a common *prior* P (Bernoulli parameter vector) and shared
+randomness (a counter-based PRNG key).  The encoder additionally holds a
+*posterior* Q and wants the decoder to obtain a sample ~Q.  Both sides derive
+the same ``n_is`` candidates X_1..X_{n_is} ~ P; the encoder forms the
+importance distribution
+
+    W(i) proportional to Q(X_i) / P(X_i)
+
+samples an index I ~ W (Gumbel-max) and transmits only I  --  log2(n_is) bits.
+
+The model vector of dimension d is partitioned into B blocks; MRC runs
+independently per block (the paper's "B blocks of size d/B"), so the uplink
+cost is B * log2(n_is) bits per conveyed sample.
+
+Two codec paths are provided:
+
+* **fixed blocks** (`encode_fixed` / `decode_fixed`): all blocks have the same
+  static size.  Candidates are derived per (block, row) with
+  ``fold_in(fold_in(key, block), row)`` so the *decoder regenerates only the
+  selected row* -- decode is O(d), not O(d * n_is).  The importance-weight
+  evaluation is the matvec ``logW = X @ a + sum(b)`` (see
+  ``core.bernoulli.log_ratio_coeffs``) and can be routed through the Pallas
+  TPU kernel in ``repro.kernels``.
+
+* **segments** (`encode_segments` / `decode_segments`): variable-size blocks
+  described by a segment-id vector, used by the Adaptive allocation of Isik
+  et al. (2024).  This path materialises the full candidate tensor and is
+  meant for the (small) models where adaptive allocation is evaluated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .bernoulli import clip01, log_ratio_coeffs
+
+# ---------------------------------------------------------------------------
+# Key derivation (the "shared randomness" of the paper, threefry counters).
+# ---------------------------------------------------------------------------
+
+
+def round_key(base: jax.Array, t) -> jax.Array:
+    """Shared key for global round t."""
+    return jax.random.fold_in(base, t)
+
+
+def client_key(base: jax.Array, client_id) -> jax.Array:
+    """Private shared randomness between the federator and one client."""
+    return jax.random.fold_in(jax.random.fold_in(base, 0x5EED), client_id)
+
+
+def sample_key(base: jax.Array, ell) -> jax.Array:
+    """Per conveyed-sample (ell in [n_UL] or [n_DL]) candidate key."""
+    return jax.random.fold_in(base, ell)
+
+
+def _block_candidates(shared_key: jax.Array, block_id, n_is: int, size: int) -> jax.Array:
+    """All n_is candidate uniform rows for one block: (n_is, size).
+
+    One threefry stream per block (cheap); both sides derive the identical
+    tensor, which is all the shared-randomness assumption requires.
+    """
+    return jax.random.uniform(jax.random.fold_in(shared_key, block_id), (n_is, size))
+
+
+def _selected_candidate(shared_key: jax.Array, block_id, row, n_is: int, size: int) -> jax.Array:
+    """The selected uniform row for one block: (size,)."""
+    u = _block_candidates(shared_key, block_id, n_is, size)
+    return jax.lax.dynamic_index_in_dim(u, row, axis=0, keepdims=False)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-size block codec.
+# ---------------------------------------------------------------------------
+
+LogWFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+# signature: (X: (nb, n_is, S) {0,1}, a: (nb, S), b: (nb, S)) -> (nb, n_is)
+
+
+def default_logw(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Pure-jnp importance log-weights: logW = X @ a + sum(b)."""
+    return jnp.einsum("bis,bs->bi", x, a) + jnp.sum(b, axis=-1, keepdims=True)
+
+
+class MRCResult(NamedTuple):
+    indices: jax.Array  # (B,) int32 -- what actually goes over the wire
+    sample: jax.Array   # (B, S) {0,1} -- decoder-side reconstruction
+
+
+@functools.partial(jax.jit, static_argnames=("n_is", "chunk", "logw_fn"))
+def encode_fixed(
+    shared_key: jax.Array,
+    select_key: jax.Array,
+    q: jax.Array,
+    p: jax.Array,
+    *,
+    n_is: int,
+    chunk: int = 32,
+    logw_fn: Optional[LogWFn] = None,
+) -> MRCResult:
+    """MRC-encode posterior q against prior p, both (B, S) block matrices.
+
+    Returns the transmitted indices and the sample the decoder will see
+    (identical to what `decode_fixed` reconstructs from the indices).
+    """
+    logw_impl = logw_fn if logw_fn is not None else default_logw
+    B, S = q.shape
+    nb = min(chunk, B)
+    n_chunks = -(-B // nb)
+    pad = n_chunks * nb - B
+    if pad:
+        # Padding blocks carry q == p == 0.5: zero KL, index discarded later.
+        halfq = jnp.full((pad, S), 0.5, q.dtype)
+        q = jnp.concatenate([q, halfq])
+        p = jnp.concatenate([p, halfq])
+
+    a, b = log_ratio_coeffs(q, p)  # (B', S) each
+
+    def chunk_body(c):
+        block_ids = c * nb + jnp.arange(nb)
+        pc = jax.lax.dynamic_slice_in_dim(p, c * nb, nb, axis=0)  # (nb, S)
+        ac = jax.lax.dynamic_slice_in_dim(a, c * nb, nb, axis=0)
+        bc = jax.lax.dynamic_slice_in_dim(b, c * nb, nb, axis=0)
+        u = jax.vmap(lambda bid: _block_candidates(shared_key, bid, n_is, S))(block_ids)
+        x = (u < clip01(pc)[:, None, :]).astype(jnp.float32)
+        logw = logw_impl(x, ac, bc)  # (nb, n_is)
+        gu = jax.vmap(
+            lambda bid: jax.random.uniform(jax.random.fold_in(select_key, bid), (n_is,))
+        )(block_ids)
+        gumbel = -jnp.log(-jnp.log(jnp.clip(gu, 1e-12, 1.0 - 1e-12)))
+        idx = jnp.argmax(logw + gumbel, axis=-1).astype(jnp.int32)  # (nb,)
+        chosen = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0, :]  # (nb, S)
+        return idx, chosen
+
+    idxs, chosen = jax.lax.map(chunk_body, jnp.arange(n_chunks))
+    idxs = idxs.reshape(-1)[:B]
+    chosen = chosen.reshape(-1, S)[:B]
+    return MRCResult(indices=idxs, sample=chosen)
+
+
+@functools.partial(jax.jit, static_argnames=("n_is",))
+def decode_fixed(shared_key: jax.Array, indices: jax.Array, p: jax.Array, *, n_is: int) -> jax.Array:
+    """Reconstruct the encoder-selected sample from the indices: (B, S)."""
+    B, S = p.shape
+
+    def per_block(bid, idx, pb):
+        u = _selected_candidate(shared_key, bid, idx, n_is, S)
+        return (u < clip01(pb)).astype(jnp.float32)
+
+    return jax.vmap(per_block)(jnp.arange(B), indices, p)
+
+
+def transmit_fixed(
+    shared_key: jax.Array,
+    select_key: jax.Array,
+    q: jax.Array,
+    p: jax.Array,
+    *,
+    n_is: int,
+    n_samples: int = 1,
+    chunk: int = 32,
+    logw_fn: Optional[LogWFn] = None,
+):
+    """Convey ``n_samples`` i.i.d. MRC samples of q (fresh candidates per ell).
+
+    Returns (indices (n_samples, B), mean_sample (B, S)). ``mean_sample`` is
+    the decoder-side estimate  q_hat = 1/n_samples * sum_ell x_ell .
+    """
+    def one(ell):
+        res = encode_fixed(
+            sample_key(shared_key, ell),
+            sample_key(select_key, ell),
+            q,
+            p,
+            n_is=n_is,
+            chunk=chunk,
+            logw_fn=logw_fn,
+        )
+        return res.indices, res.sample
+
+    idxs, samples = jax.lax.map(one, jnp.arange(n_samples))
+    return idxs, jnp.mean(samples, axis=0)
+
+
+def receive_fixed(shared_key: jax.Array, indices: jax.Array, p: jax.Array, *, n_is: int) -> jax.Array:
+    """Decode n_samples relayed index vectors: indices (n_samples, B) -> (B, S)."""
+    samples = jax.vmap(
+        lambda ell, idx: decode_fixed(sample_key(shared_key, ell), idx, p, n_is=n_is)
+    )(jnp.arange(indices.shape[0]), indices)
+    return jnp.mean(samples, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Variable-size (segment) codec for Adaptive block allocation.
+# ---------------------------------------------------------------------------
+
+
+def _segment_candidates(shared_key: jax.Array, n_is: int, d: int) -> jax.Array:
+    rows = jnp.arange(n_is)
+    return jax.vmap(lambda r: jax.random.uniform(jax.random.fold_in(shared_key, r), (d,)))(rows)
+
+
+@functools.partial(jax.jit, static_argnames=("n_is", "n_seg"))
+def encode_segments(
+    shared_key: jax.Array,
+    select_key: jax.Array,
+    q: jax.Array,
+    p: jax.Array,
+    seg_ids: jax.Array,
+    *,
+    n_is: int,
+    n_seg: int,
+) -> MRCResult:
+    """MRC over variable blocks given per-parameter segment ids (d,)."""
+    d = q.shape[0]
+    u = _segment_candidates(shared_key, n_is, d)          # (n_is, d)
+    x = (u < clip01(p)[None, :]).astype(jnp.float32)       # (n_is, d)
+    a, b = log_ratio_coeffs(q, p)                          # (d,), (d,)
+    contrib = x * a[None, :] + b[None, :]                  # (n_is, d)
+    logw = jax.vmap(lambda row: jax.ops.segment_sum(row, seg_ids, num_segments=n_seg))(contrib)
+    gu = jax.random.uniform(select_key, (n_is, n_seg))
+    gumbel = -jnp.log(-jnp.log(jnp.clip(gu, 1e-12, 1.0 - 1e-12)))
+    idx = jnp.argmax(logw + gumbel, axis=0).astype(jnp.int32)  # (n_seg,)
+    chosen = jnp.take_along_axis(x, idx[seg_ids][None, :], axis=0)[0]  # (d,)
+    return MRCResult(indices=idx, sample=chosen)
+
+
+@functools.partial(jax.jit, static_argnames=("n_is",))
+def decode_segments(
+    shared_key: jax.Array, indices: jax.Array, p: jax.Array, seg_ids: jax.Array, *, n_is: int
+) -> jax.Array:
+    d = p.shape[0]
+    u = _segment_candidates(shared_key, n_is, d)
+    x = (u < clip01(p)[None, :]).astype(jnp.float32)
+    return jnp.take_along_axis(x, indices[seg_ids][None, :], axis=0)[0]
+
+
+def transmit_segments(
+    shared_key, select_key, q, p, seg_ids, *, n_is: int, n_seg: int, n_samples: int = 1
+):
+    def one(ell):
+        res = encode_segments(
+            sample_key(shared_key, ell), sample_key(select_key, ell), q, p, seg_ids,
+            n_is=n_is, n_seg=n_seg,
+        )
+        return res.indices, res.sample
+
+    idxs, samples = jax.lax.map(one, jnp.arange(n_samples))
+    return idxs, jnp.mean(samples, axis=0)

@@ -1,0 +1,114 @@
+"""Stochastic quantizers and baseline compressors.
+
+The CFL path of BiCompFL composes a stochastic quantizer Q_s( . ) -- which
+turns a real gradient into a vector of Bernoulli posteriors -- with MRC.
+This module implements:
+
+* ``stochastic_sign``      : the paper's stochastic SignSGD posterior
+                             q_e = 1 / (1 + exp(-g_e / K)), values {+1,-1}.
+* ``qsgd``                  : Alistarh et al. (2017) Q_s with s levels; the
+                             fractional part is the Bernoulli posterior.
+* deterministic baselines used by the benchmark schemes: ``sign``, ``topk``,
+  ``randk`` -- plus error-feedback helpers.
+
+All functions operate on flat vectors; the FL runtime flattens pytrees.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .bernoulli import clip01
+
+
+# ---------------------------------------------------------------------------
+# Stochastic quantizers (gradient -> Bernoulli posterior)
+# ---------------------------------------------------------------------------
+
+
+class SignPosterior(NamedTuple):
+    q: jax.Array  # Bernoulli parameter of "take +1"
+
+    def value(self, bits: jax.Array) -> jax.Array:
+        """Map MRC bits {0,1} (or their mean in [0,1]) to gradient values."""
+        return 2.0 * bits - 1.0
+
+
+def stochastic_sign(g: jax.Array, *, temperature: float = 1.0) -> SignPosterior:
+    """Stochastic SignSGD: q_e = sigmoid(g_e / K)."""
+    return SignPosterior(q=clip01(jax.nn.sigmoid(g / temperature)))
+
+
+class QsgdPosterior(NamedTuple):
+    q: jax.Array        # Bernoulli parameter ("round up")
+    norm: jax.Array     # ||g||  (scalar side information)
+    sign: jax.Array     # sign(g)
+    tau: jax.Array      # lower level index per entry
+    s: int              # number of quantization levels
+
+    def value(self, bits: jax.Array) -> jax.Array:
+        """Reconstruct  ||g|| * sign(g) * (tau + bits) / s ."""
+        return self.norm * self.sign * (self.tau + bits) / self.s
+
+
+def qsgd(g: jax.Array, *, s: int) -> QsgdPosterior:
+    """Q_s of Alistarh et al.: unbiased stochastic quantization to s levels."""
+    norm = jnp.linalg.norm(g) + 1e-12
+    r = jnp.abs(g) / norm * s            # in [0, s]
+    tau = jnp.clip(jnp.floor(r), 0, s - 1)
+    q = clip01(r - tau)
+    return QsgdPosterior(q=q, norm=norm, sign=jnp.sign(g), tau=tau, s=s)
+
+
+def qsgd_sample(key: jax.Array, post: QsgdPosterior) -> jax.Array:
+    """Draw the native (non-MRC) Q_s sample -- used to validate unbiasedness."""
+    bits = jax.random.bernoulli(key, post.q).astype(jnp.float32)
+    return post.value(bits)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic baseline compressors
+# ---------------------------------------------------------------------------
+
+
+def sign_compress(g: jax.Array) -> jax.Array:
+    """1-bit SignSGD with magnitude scaling (mean-|g| scale, as in MemSGD)."""
+    scale = jnp.mean(jnp.abs(g))
+    return scale * jnp.sign(g)
+
+
+def topk_compress(g: jax.Array, k: int) -> jax.Array:
+    """Keep the k largest-magnitude entries (biased, contractive)."""
+    d = g.shape[0]
+    k = min(k, d)
+    _, idx = jax.lax.top_k(jnp.abs(g), k)
+    out = jnp.zeros_like(g)
+    return out.at[idx].set(g[idx])
+
+
+def randk_compress(key: jax.Array, g: jax.Array, k: int) -> jax.Array:
+    """Keep k uniformly random entries, rescaled by d/k (unbiased)."""
+    d = g.shape[0]
+    idx = jax.random.choice(key, d, (k,), replace=False)
+    out = jnp.zeros_like(g)
+    return out.at[idx].set(g[idx] * (d / k))
+
+
+# Bit costs per parameter for the baseline compressors (32-bit floats, index
+# cost ceil(log2 d) for sparse methods). Used by core.bitmeter.
+FLOAT_BITS = 32
+
+
+def sign_bits(d: int) -> float:
+    return float(d) + FLOAT_BITS  # 1 bit/param + one scale
+
+
+def dense_bits(d: int) -> float:
+    return float(d) * FLOAT_BITS
+
+
+def topk_bits(d: int, k: int) -> float:
+    import math
+    return k * (FLOAT_BITS + math.ceil(math.log2(max(d, 2))))

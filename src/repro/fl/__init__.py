@@ -1,0 +1,2 @@
+"""Federated-learning runtime: tasks, data, federator loops, baselines."""
+from . import baselines, data, federator, nets, tasks  # noqa: F401

@@ -1,0 +1,125 @@
+"""Small pure-JAX classifier networks for the FL experiments.
+
+Bias-free CNN/MLP families mirroring the paper's LeNet5 / 4CNN / 6CNN
+(scaled to the synthetic datasets).  For probabilistic-mask training the
+weights use the *signed-constant* initialization of Ramanujan et al. (2020):
+w = sign(n) * std_kaiming -- the setting in which random subnetworks are
+known to be expressive.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+class Net(NamedTuple):
+    init: Callable[[jax.Array], list]
+    apply: Callable[[list, jax.Array], jax.Array]  # (weights, x NHWC) -> logits
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _kaiming_signed(key, shape, fan_in, signed_constant: bool):
+    std = math.sqrt(2.0 / fan_in)
+    w = jax.random.normal(key, shape)
+    if signed_constant:
+        return jnp.sign(w) * std
+    return w * std
+
+
+def make_cnn(
+    hw: int = 14,
+    channels: int = 1,
+    n_classes: int = 10,
+    conv_widths: Sequence[int] = (32, 64),
+    dense_widths: Sequence[int] = (128,),
+    signed_constant: bool = False,
+) -> Net:
+    """Conv(3x3)+ReLU+MaxPool blocks, then dense head. Bias-free."""
+    n_pools = len(conv_widths)
+    final_hw = hw // (2 ** n_pools)
+    assert final_hw >= 1, "too many pools for input size"
+
+    shapes: List[Tuple[Tuple[int, ...], int]] = []  # (shape, fan_in)
+    cin = channels
+    for w_ in conv_widths:
+        shapes.append(((3, 3, cin, w_), 3 * 3 * cin))
+        cin = w_
+    flat = final_hw * final_hw * cin
+    din = flat
+    for w_ in dense_widths:
+        shapes.append(((din, w_), din))
+        din = w_
+    shapes.append(((din, n_classes), din))
+
+    def init(key):
+        keys = jax.random.split(key, len(shapes))
+        return [_kaiming_signed(k, s, f, signed_constant) for k, (s, f) in zip(keys, shapes)]
+
+    n_conv = len(conv_widths)
+
+    def apply(weights, x):
+        h = x
+        for i in range(n_conv):
+            h = _maxpool(jax.nn.relu(_conv(h, weights[i])))
+        h = h.reshape(h.shape[0], -1)
+        for w_ in weights[n_conv:-1]:
+            h = jax.nn.relu(h @ w_)
+        return h @ weights[-1]
+
+    return Net(init=init, apply=apply)
+
+
+def make_mlp(
+    in_dim: int, widths: Sequence[int] = (256, 256), n_classes: int = 10,
+    signed_constant: bool = False,
+) -> Net:
+    dims = [in_dim, *widths, n_classes]
+
+    def init(key):
+        keys = jax.random.split(key, len(dims) - 1)
+        return [
+            _kaiming_signed(k, (a, b), a, signed_constant)
+            for k, a, b in zip(keys, dims[:-1], dims[1:])
+        ]
+
+    def apply(weights, x):
+        h = x.reshape(x.shape[0], -1)
+        for w_ in weights[:-1]:
+            h = jax.nn.relu(h @ w_)
+        return h @ weights[-1]
+
+    return Net(init=init, apply=apply)
+
+
+def flatten_weights(weights) -> Tuple[jax.Array, Callable]:
+    return ravel_pytree(weights)
+
+
+def cross_entropy(logits: jax.Array, y: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(apply_fn, weights, x, y, batch: int = 1000) -> float:
+    n = x.shape[0]
+    correct = 0
+    for i in range(0, n, batch):
+        logits = apply_fn(weights, x[i : i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i : i + batch]))
+    return correct / n

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for BiCompFL hot-spots (validated via interpret=True)."""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: per-block Bernoulli KL reduction.
+
+Adaptive(-Avg) block allocation needs  sum_{e in block} d_KL(q_e || p_e)
+every round for every block (a d-sized elementwise + reduce).  This is a
+VPU-bound streaming reduction: (1, TILE_S) tiles of q and p flow through
+VMEM; the scalar per-block partial sums accumulate in the output block
+across the S-grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_S = 512
+_EPS = 1e-6
+
+
+def _kl_kernel(q_ref, p_ref, o_ref):
+    s = pl.program_id(1)
+    q = jnp.clip(q_ref[0], _EPS, 1.0 - _EPS)
+    p = jnp.clip(p_ref[0], _EPS, 1.0 - _EPS)
+    kl = q * (jnp.log(q) - jnp.log(p)) + (1.0 - q) * (jnp.log1p(-q) - jnp.log1p(-p))
+    part = jnp.sum(kl)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[0] = part
+
+    @pl.when(s != 0)
+    def _acc():
+        o_ref[0] = o_ref[0] + part
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bernoulli_kl_pallas(q: jax.Array, p: jax.Array, *, interpret: bool = True):
+    """Per-block KL sums for (NB, S) with S % TILE_S == 0; returns (NB,)."""
+    nb, s = q.shape
+    assert s % TILE_S == 0, s
+    grid = (nb, s // TILE_S)
+    return pl.pallas_call(
+        _kl_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TILE_S), lambda b_, s_: (b_, s_)),
+            pl.BlockSpec((1, TILE_S), lambda b_, s_: (b_, s_)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b_, s_: (b_,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=interpret,
+    )(q, p)

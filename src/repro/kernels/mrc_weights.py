@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: MRC importance log-weights as an MXU matvec.
+
+The per-block MRC weight evaluation
+
+    logW[i] = sum_e  x_{ie} * a_e + b_e          (i in [n_IS])
+
+is the compute hot-spot of BiCompFL encoding: every round, every client
+evaluates it for every block (d * n_IS multiply-adds total).  Refactored as
+
+    logW = X @ a + sum(b)
+
+it is a (n_IS x S) x (S,) product -- ideal for the 128x128 systolic MXU once
+tiled.  TPU adaptation (vs. the paper's GPU runs): candidates X live in HBM
+as (NB, NIS, S); we stream (TI=128, TS=128) tiles through VMEM, accumulate
+partial dot products in the f32 output block, and fold the offset term
+sum_s b[nb, s] in on the first S-tile.  Grid: (NB, NIS/TI, S/TS); the output
+BlockSpec maps all S-tiles of one (nb, i-tile) to the same VMEM block, so the
+accumulation is carried in VMEM without HBM round-trips.
+
+VMEM working set per step: 128*128*4 (X) + 2*128*4 (a, b) + 128*4 (out)
+~ 66 KiB  <<  16 MiB VMEM; the MXU matvec dims are 128-aligned by padding in
+``ops.mrc_logw``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_I = 128  # candidate-row tile (MXU sublane dim)
+TILE_S = 128  # block-entry tile (MXU lane dim)
+
+
+def _mrc_logw_kernel(x_ref, a_ref, b_ref, o_ref):
+    """One (nb, i_tile, s_tile) grid step."""
+    s = pl.program_id(2)
+
+    x = x_ref[0]          # (TILE_I, TILE_S) candidate bits
+    a = a_ref[0]          # (TILE_S,)
+    b = b_ref[0]          # (TILE_S,)
+
+    # Partial matvec on the MXU; f32 accumulation.
+    part = jnp.dot(x, a[:, None], preferred_element_type=jnp.float32)[:, 0]
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[0] = part + jnp.sum(b)
+
+    @pl.when(s != 0)
+    def _acc():
+        o_ref[0] = o_ref[0] + part + jnp.sum(b)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mrc_logw_pallas(x: jax.Array, a: jax.Array, b: jax.Array, *, interpret: bool = True):
+    """logW = X @ a + sum(b) for 128-aligned shapes.
+
+    x: (NB, NIS, S) float32 {0,1};  a, b: (NB, S);  returns (NB, NIS).
+    Shapes must satisfy NIS % TILE_I == 0 and S % TILE_S == 0 (use
+    ``ops.mrc_logw`` for the padded general-shape entry point).
+    """
+    nb, nis, s = x.shape
+    assert nis % TILE_I == 0 and s % TILE_S == 0, (nis, s)
+    grid = (nb, nis // TILE_I, s // TILE_S)
+    return pl.pallas_call(
+        _mrc_logw_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TILE_I, TILE_S), lambda b_, i, s_: (b_, i, s_)),
+            pl.BlockSpec((1, TILE_S), lambda b_, i, s_: (b_, s_)),
+            pl.BlockSpec((1, TILE_S), lambda b_, i, s_: (b_, s_)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_I), lambda b_, i, s_: (b_, i)),
+        out_shape=jax.ShapeDtypeStruct((nb, nis), jnp.float32),
+        interpret=interpret,
+    )(x, a, b)

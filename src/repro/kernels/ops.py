@@ -1,0 +1,110 @@
+"""JIT'd general-shape wrappers around the Pallas kernels.
+
+These pad arbitrary shapes to the kernels' tile alignment, invoke the
+kernel, and slice the result back.  ``interpret`` defaults to True so the
+kernels execute (and are validated) on CPU; on a real TPU pass
+``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bernoulli_kl import TILE_S as KL_TILE_S, bernoulli_kl_pallas
+from .mrc_weights import TILE_I, TILE_S, mrc_logw_pallas
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int, value: float = 0.0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mrc_logw(x: jax.Array, a: jax.Array, b: jax.Array, *, interpret: bool = True):
+    """logW = X @ a + sum(b); x (NB, NIS, S), a/b (NB, S) -> (NB, NIS).
+
+    Zero-padding is exact: padded entries contribute x*0 + 0 to the sums.
+    Drop-in replacement for ``repro.core.mrc.default_logw`` (as ``logw_fn``).
+    """
+    nis, s = x.shape[1], x.shape[2]
+    xp = _pad_axis(_pad_axis(x.astype(jnp.float32), 1, TILE_I), 2, TILE_S)
+    ap = _pad_axis(a.astype(jnp.float32), 1, TILE_S)
+    bp = _pad_axis(b.astype(jnp.float32), 1, TILE_S)
+    out = mrc_logw_pallas(xp, ap, bp, interpret=interpret)
+    return out[:, :nis]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bernoulli_kl(q: jax.Array, p: jax.Array, *, interpret: bool = True):
+    """Per-block KL(q||p) sums; q, p (NB, S) -> (NB,) nats.
+
+    Pads with q == p == 0.5 (zero KL), so the padded sum is exact.
+    """
+    qp = _pad_axis(q.astype(jnp.float32), 1, KL_TILE_S, value=0.5)
+    pp = _pad_axis(p.astype(jnp.float32), 1, KL_TILE_S, value=0.5)
+    return bernoulli_kl_pallas(qp, pp, interpret=interpret)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: float = 1.0, interpret: bool = True) -> jax.Array:
+    """General-shape flash attention.
+
+    q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh) -- GQA kv heads are repeated,
+    heads fold into the batch dim, Sq/Skv/Dh pad to the kernel tiles.
+    Returns (B, Sq, H, Dh).
+    """
+    from .flash_attn import BK, BQ, flash_attention_pallas
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    # (B, S, H, Dh) -> (B*H, S, Dh)
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, dh)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * h, skv, dh)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * h, skv, dh)
+    qp = _pad_axis(_pad_axis(qf, 1, BQ), 2, 128)
+    kp = _pad_axis(_pad_axis(kf, 1, BK), 2, 128)
+    vp = _pad_axis(_pad_axis(vf, 1, BK), 2, 128)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 scale=scale, skv=skv, interpret=interpret)
+    out = out[:, :sq, :dh].reshape(b, h, sq, dh)
+    return jnp.moveaxis(out, 1, 2)
+
+
+def rwkv_time_mix(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+                  u: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """General-shape chunked RWKV-6 time-mix (zero initial state).
+
+    r/k/v/logw: (B, S, H, Dh); u: (H, Dh).  Returns (B, S, H, Dh).
+    Sequence pads to the kernel chunk; heads fold into the batch dim.
+    """
+    from .rwkv_chunk import CHUNK, rwkv_chunk_pallas
+    b, s, h, dh = r.shape
+
+    def fold(t):  # (B, S, H, Dh) -> (B*H, S_pad, Dh)
+        t = jnp.moveaxis(t, 2, 1).reshape(b * h, s, dh)
+        return _pad_axis(t, 1, CHUNK)
+
+    # pad value 0 is safe: logw 0 => decay 1, r/k/v 0 contribute nothing
+    rf, kf, vf, lwf = fold(r), fold(k), fold(v), fold(logw)
+    uf = jnp.tile(u[None], (b, 1, 1)).reshape(b * h, 1, dh)
+    out = rwkv_chunk_pallas(rf, kf, vf, lwf, uf, interpret=interpret)
+    out = out[:, :s].reshape(b, h, s, dh)
+    return jnp.moveaxis(out, 1, 2)
+
+
+def mrc_logw_fn(interpret: bool = True):
+    """Return a ``logw_fn`` closure for ``repro.core.mrc.encode_fixed``."""
+    def fn(x, a, b):
+        return mrc_logw(x, a, b, interpret=interpret)
+    return fn

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bernoulli import clip01
+
+
+def mrc_logw_ref(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Importance log-weights for MRC.
+
+    x: (NB, NIS, S) candidate bits in {0,1} (float)
+    a: (NB, S)      log-ratio slope  log(q/p) - log((1-q)/(1-p))
+    b: (NB, S)      log-ratio offset log((1-q)/(1-p))
+    returns (NB, NIS):  logW[nb, i] = sum_s x[nb,i,s]*a[nb,s] + b[nb,s]
+    """
+    return jnp.einsum("bis,bs->bi", x, a) + jnp.sum(b, axis=-1, keepdims=True)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool, window: int = 0,
+                        scale: float = 1.0) -> jnp.ndarray:
+    """Naive softmax attention oracle.
+
+    q: (BH, Sq, Dh); k, v: (BH, Skv, Dh); returns (BH, Sq, Dh).
+    """
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    sq, skv = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def bernoulli_kl_ref(q: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Per-block summed Bernoulli KL.
+
+    q, p: (NB, S) Bernoulli parameters; returns (NB,) nats.
+    """
+    q = clip01(q)
+    p = clip01(p)
+    kl = q * (jnp.log(q) - jnp.log(p)) + (1 - q) * (jnp.log1p(-q) - jnp.log1p(-p))
+    return jnp.sum(kl, axis=-1)

@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The container has one CPU device; the two lines above (before ANY jax
+import) give XLA 512 host placeholder devices so ``make_production_mesh``
+can build the production meshes.  Nothing is allocated: inputs, params,
+optimizer state and caches are ShapeDtypeStructs.
+
+Per combination this prints/collects:
+  * memory_analysis()  -- per-device argument/temp bytes (does it fit HBM?)
+  * cost_analysis()    -- per-device FLOPs + bytes accessed
+  * the collective schedule parsed from the optimized HLO
+  * the three roofline terms (see launch/roofline.py)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.models import sharding, transformer as T
+from repro.launch import roofline as RL
+from repro.launch import train as train_lib
+from repro.launch.mesh import make_production_mesh
+
+
+# Microbatch counts keeping per-device activation checkpoints << HBM.
+def default_microbatches(cfg, global_batch: int, data_total: int) -> int:
+    """Gradient-accumulation depth: ~1 sample/device/microbatch for large
+    models (activation checkpoints dominate), more for small ones."""
+    b_local = max(1, global_batch // max(data_total, 1))
+    target_local = 1 if cfg.params_count() > 20e9 else min(4, b_local)
+    return max(1, b_local // target_local)
+
+
+def _shardings(mesh, specs_tree, sds_tree):
+    """NamedShardings with per-leaf sanitation against actual dims."""
+    flat_specs, sdef = jax.tree.flatten(
+        specs_tree, is_leaf=lambda t: isinstance(t, P))
+    flat_sds = jax.tree.leaves(sds_tree)
+    out = []
+    for spec, sds in zip(flat_specs, flat_sds):
+        out.append(NamedSharding(mesh, sharding.sanitize(sds.shape, spec)))
+    return jax.tree.unflatten(sdef, out)
+
+
+def lower_combo(arch: str, shape: str, mesh, *, kv_chunk: int = 1024,
+                donate: bool = True, overrides: Optional[Dict] = None,
+                microbatches: Optional[int] = None):
+    """Returns (lowered, compiled, meta) for one (arch, shape, mesh)."""
+    import dataclasses
+    cfg = configs.for_shape(configs.get(arch), shape)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    info = configs.SHAPES[shape]
+    sharding.set_mesh(mesh)
+    model = T.build(cfg)
+    batch_sds = configs.input_specs(cfg, shape)
+    kind = info["kind"]
+
+    repl = NamedSharding(mesh, P())
+    if kind == "train":
+        data_total = mesh.devices.size // mesh.shape["model"]
+        mb = microbatches or default_microbatches(cfg, info["batch"], data_total)
+        setup = train_lib.build_setup(cfg, microbatches=mb, kv_chunk=kv_chunk)
+        p_shard = _shardings(mesh, setup.param_specs, setup.params_sds)
+        o_shard = _shardings(mesh, setup.opt_specs, setup.opt_sds)
+        b_specs = train_lib.batch_specs(cfg, batch_sds)
+        b_shard = _shardings(mesh, b_specs, batch_sds)
+        fn = jax.jit(
+            setup.step_fn,
+            in_shardings=(p_shard, o_shard, b_shard, repl),
+            out_shardings=(None, p_shard, o_shard),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        lowered = fn.lower(setup.params_sds, setup.opt_sds, batch_sds, key_sds)
+        meta = {"kind": "train", "microbatches": mb,
+                "optimizer": setup.opt_name}
+    elif kind == "prefill":
+        params_sds, param_specs = T.abstract_init(model)
+        param_specs = T.fsdp_specs(params_sds, param_specs)
+        p_shard = _shardings(mesh, param_specs, params_sds)
+        b_specs = train_lib.batch_specs(cfg, batch_sds)
+        b_shard = _shardings(mesh, b_specs, batch_sds)
+        fn = jax.jit(
+            lambda params, batch: T.prefill_step(model, params, batch,
+                                                 kv_chunk=kv_chunk),
+            in_shardings=(p_shard, b_shard))
+        lowered = fn.lower(params_sds, batch_sds)
+        meta = {"kind": "prefill"}
+    else:  # decode
+        params_sds, param_specs = T.abstract_init(model)
+        # decode params: keep weights sharded over model only (no ZeRO
+        # all-gathers on the latency path); embed/head stay 2-D sharded.
+        p_shard = _shardings(mesh, param_specs, params_sds)
+        b = info["batch"]
+        cache_sds = jax.eval_shape(
+            lambda: T.init_cache(model, b, info["seq"]))
+        c_specs = T.cache_specs(model, batch=b)
+        c_shard = _shardings(mesh, c_specs, cache_sds)
+        tok_sds = batch_sds["tokens"]
+        tok_shard = NamedSharding(
+            mesh, sharding.sanitize(tok_sds.shape,
+                                    P(sharding.batch_axes(), None)))
+        fn = jax.jit(
+            lambda params, cache, tokens, pos: T.serve_step(
+                model, params, cache, tokens, pos),
+            in_shardings=(p_shard, c_shard, tok_shard, repl),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,) if donate else (),
+        )
+        lowered = fn.lower(params_sds, cache_sds, tok_sds,
+                           jax.ShapeDtypeStruct((), jnp.int32))
+        meta = {"kind": "decode"}
+
+    compiled = lowered.compile()
+    return lowered, compiled, meta
+
+
+def run_combo(arch: str, shape: str, *, multi_pod: bool = False,
+              kv_chunk: int = 1024, verbose: bool = True,
+              overrides: Optional[Dict] = None,
+              microbatches: Optional[int] = None) -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = configs.get(arch)
+    skip = configs.shape_supported(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "skip", "reason": skip}
+    t0 = time.time()
+    try:
+        lowered, compiled, meta = lower_combo(arch, shape, mesh,
+                                              kv_chunk=kv_chunk,
+                                              overrides=overrides,
+                                              microbatches=microbatches)
+    except Exception as e:  # a failure here is a sharding bug
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "FAIL", "error": f"{type(e).__name__}: {e}"}
+    out = RL.analyze(compiled, mesh)
+    rl = out["roofline"]
+    res = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "status": "ok", "compile_s": round(time.time() - t0, 1),
+        **meta,
+        "roofline": rl.row(),
+        "collectives": {"bytes": out["collectives"].bytes_by_kind,
+                        "count": out["collectives"].count_by_kind},
+        "memory": out["memory"],
+        "model_flops_6nd": model_flops(arch, shape),
+    }
+    if verbose:
+        mem = out["memory"]
+        print(f"[{arch} x {shape} x {'2pod' if multi_pod else '1pod'}] "
+              f"compile {res['compile_s']}s  "
+              f"args/dev {fmt_b(mem['argument_bytes'])}  "
+              f"temp/dev {fmt_b(mem['temp_bytes'])}  "
+              f"flops/dev {rl.flops:.3e}  dominant={rl.dominant}", flush=True)
+    return res
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE), D = tokens/step."""
+    cfg = configs.get(arch)
+    info = configs.SHAPES[shape]
+    n = cfg.active_params_count()
+    if info["kind"] == "train":
+        tokens = info["batch"] * info["seq"]
+        return 6.0 * n * tokens
+    if info["kind"] == "prefill":
+        tokens = info["batch"] * info["seq"]
+        return 2.0 * n * tokens
+    return 2.0 * n * info["batch"]  # decode: one token per sequence
+
+
+def fmt_b(x: Optional[float]) -> str:
+    if x is None:
+        return "?"
+    for u in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{u}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(configs.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--kv-chunk", type=int, default=1024)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    combos = []
+    archs = list(configs.ALIASES) if (args.all or not args.arch) else [args.arch]
+    shapes = list(configs.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                combos.append((a, s, mp))
+
+    results = []
+    for a, s, mp in combos:
+        results.append(run_combo(a, s, multi_pod=mp, kv_chunk=args.kv_chunk))
+
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_fail} FAILED")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"wrote {args.json}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

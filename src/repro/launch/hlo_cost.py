@@ -1,0 +1,454 @@
+"""Hierarchical HLO cost model with while-loop trip-count multiplication.
+
+``compiled.cost_analysis()`` counts every computation exactly once -- a
+``lax.scan`` of 60 layers contributes one layer's FLOPs (verified
+empirically; see tests/test_hlo_cost.py).  For a framework whose entire
+model stack is scanned (layers) and looped (microbatches, kv chunks,
+recurrences), that underestimates FLOPs/bytes by 2-3 orders of magnitude.
+
+This module parses ``compiled.as_text()`` (post-optimization HLO) into a
+computation call graph and accumulates, per computation:
+
+  * FLOPs: ``dot`` ops (2 * prod(out) * prod(contracting dims)) including
+    dots nested inside fusions;
+  * HBM bytes: per top-level instruction, operand bytes + output bytes --
+    the canonical post-fusion traffic model (each fusion reads its operands
+    once and writes its outputs once);
+  * collective bytes/counts by kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute), output-size
+    convention.
+
+and multiplies through the call graph:
+
+  * ``while``: body + cond costs x ``known_trip_count`` (XLA annotates the
+    trip count in backend_config for counted loops; default 1);
+  * ``fusion`` / ``call``: called computation x 1 (FLOPs only for fusions --
+    their internal traffic stays in registers/VMEM);
+  * ``conditional``: every branch x 1 (upper bound).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# instruction: [ROOT] %name = <shape> opcode(...)...
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\(?[^)]*?\)?\s*?[\w\[\],{}\s]*?)\s+"
+    r"([\w\-]+)\((.*)$")
+# simpler fallback: capture name, then everything, then find opcode
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*?)([\w\-]+)\((.*)\)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_TARGET_RE = re.compile(
+    r"(?:calls|body|condition|to_apply|branch_computations)=\{?(%?[\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+def _shape_list(shape_text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _shape_list(shape_text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    shape_text: str
+    opcode: str
+    rest: str               # everything after the opening paren
+    line: str
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_bytes(self.shape_text)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # %name -> shape text
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "CostTotals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0.0) + v * mult
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+# opcodes whose operand/output bytes are NOT HBM traffic at this level
+_PLUMBING = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "iota", "partition-id", "replica-id"}
+_CONTROL = {"while", "call", "fusion", "conditional", "async-start",
+            "async-done", "async-update", "custom-call"}
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            # computation header:  [ENTRY] %name (args...) -> result {
+            if stripped.endswith("{") and "->" in stripped and \
+                    stripped.startswith(("%", "ENTRY ")):
+                head = stripped.split("(")[0].strip()
+                is_entry = stripped.startswith("ENTRY")
+                name = head.replace("ENTRY", "").strip()
+                if name:
+                    cur = Computation(name=name)
+                    if is_entry:
+                        entry = name
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(stripped)
+        if not m:
+            continue
+        name, shape_text, opcode, rest = m.groups()
+        inst = Instr(name=name, shape_text=shape_text, opcode=opcode,
+                     rest=rest, line=stripped)
+        cur.instrs.append(inst)
+        cur.shapes[name] = shape_text
+    return comps, entry
+
+
+def _dot_flops(inst: Instr, comp: Computation) -> float:
+    ops = _OPERAND_RE.findall(inst.rest.split(")")[0])
+    if not ops:
+        return 0.0
+    lhs_shape = comp.shapes.get(ops[0], "")
+    shapes = _shape_list(lhs_shape)
+    if not shapes:
+        return 0.0
+    lhs_dims = shapes[0][1]
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+    contract = [int(d) for d in mc.group(1).split(",") if d] if mc else []
+    k = 1
+    for d in contract:
+        if d < len(lhs_dims):
+            k *= lhs_dims[d]
+    out = 1
+    for _, dims in _shape_list(inst.shape_text):
+        for d in dims:
+            out *= d
+    return 2.0 * out * k
+
+
+def _operand_names(inst: Instr) -> List[str]:
+    depth, end = 0, len(inst.rest)
+    for i, ch in enumerate(inst.rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    return _OPERAND_RE.findall(inst.rest[:end])
+
+
+def _operand_bytes(inst: Instr, comp: Computation) -> int:
+    return sum(_shape_bytes(comp.shapes.get(op, ""))
+               for op in _operand_names(inst))
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_computations(hlo_text)
+        self._memo: Dict[str, CostTotals] = {}
+        # computations reachable only as fusion bodies: traffic is internal
+        self._fusion_bodies = set()
+        for comp in self.comps.values():
+            for inst in comp.instrs:
+                if inst.opcode == "fusion":
+                    m = re.search(r"calls=(%?[\w.\-]+)", inst.line)
+                    if m:
+                        self._fusion_bodies.add(m.group(1))
+
+    # ------------------------------------------------------------------
+    # Sliced-access refinement.  A scan body accesses its stacked xs
+    # through dynamic-slice (and writes ys through dynamic-update-slice);
+    # the physical traffic is the slice, not the full operand.  XLA fuses
+    # the slice into consumers, so the refinement must look *through*
+    # fusion parameters.
+    # ------------------------------------------------------------------
+
+    def _param_effective_bytes(self, fc_name: str) -> Dict[int, int]:
+        """For fusion body ``fc_name``: parameter index -> effective bytes
+        (slice sizes when the parameter is consumed only via
+        dynamic-slice / as the destination of dynamic-update-slice)."""
+        comp = self.comps.get(fc_name)
+        if comp is None:
+            return {}
+        # parameter name by index
+        pidx: Dict[str, int] = {}
+        for inst in comp.instrs:
+            if inst.opcode == "parameter":
+                m = re.match(r"^(\d+)", inst.rest)
+                if m:
+                    pidx[inst.name] = int(m.group(1))
+        consumers: Dict[str, List[Tuple[Instr, int]]] = {}
+        for inst in comp.instrs:
+            for pos, op in enumerate(_operand_names(inst)):
+                if op in pidx:
+                    consumers.setdefault(op, []).append((inst, pos))
+        out: Dict[int, int] = {}
+        for pname, uses in consumers.items():
+            sliced = 0
+            ok = True
+            for inst, pos in uses:
+                if inst.opcode == "dynamic-slice" and pos == 0:
+                    sliced += inst.out_bytes
+                elif inst.opcode == "dynamic-update-slice" and pos == 0:
+                    # destination: in-place update, traffic ~ update size
+                    ops = _operand_names(inst)
+                    upd = _shape_bytes(comp.shapes.get(ops[1], "")) if len(ops) > 1 else 0
+                    sliced += upd
+                else:
+                    ok = False
+                    break
+            if ok and sliced:
+                out[pidx[pname]] = sliced
+        return out
+
+    def _fusion_hbm_bytes(self, inst: Instr, comp: Computation) -> int:
+        m = re.search(r"calls=(%?[\w.\-]+)", inst.line)
+        eff = self._param_effective_bytes(m.group(1)) if m else {}
+        total = 0
+        ops = _operand_names(inst)
+        for i, op in enumerate(ops):
+            full = _shape_bytes(comp.shapes.get(op, ""))
+            total += min(eff.get(i, full), full)
+        # output: if the fusion root is a dynamic-update-slice the result
+        # aliases the destination -- write traffic ~ the updated slice
+        fc = self.comps.get(m.group(1)) if m else None
+        out_b = inst.out_bytes
+        if fc and fc.instrs:
+            root = fc.instrs[-1]
+            if root.opcode == "dynamic-update-slice":
+                rops = _operand_names(root)
+                if len(rops) > 1:
+                    out_b = _shape_bytes(fc.shapes.get(rops[1], "")) or out_b
+        return total + out_b
+
+    # ------------------------------------------------------------------
+    def cost_of(self, name: str, *, as_fusion: bool = False) -> CostTotals:
+        key = (name, as_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = CostTotals()
+        comp = self.comps.get(name)
+        if comp is None:
+            return total
+        self._memo[key] = total  # break cycles defensively
+        for inst in comp.instrs:
+            op = inst.opcode
+            kind = next((k for k in COLLECTIVE_KINDS
+                         if op == k or op.startswith(k + "-")), None)
+            if kind:
+                b = inst.out_bytes
+                total.coll_bytes[kind] = total.coll_bytes.get(kind, 0.0) + b
+                total.coll_count[kind] = total.coll_count.get(kind, 0.0) + 1
+                total.hbm_bytes += inst.out_bytes + _operand_bytes(inst, comp)
+                continue
+            if op == "dot":
+                total.flops += _dot_flops(inst, comp)
+                if not as_fusion:
+                    total.hbm_bytes += inst.out_bytes + _operand_bytes(inst, comp)
+                continue
+            if op == "while":
+                trips = 1
+                m = _TRIP_RE.search(inst.line)
+                if m:
+                    trips = int(m.group(1))
+                mb = re.search(r"body=(%?[\w.\-]+)", inst.line)
+                mc = re.search(r"condition=(%?[\w.\-]+)", inst.line)
+                if mb:
+                    total.add(self.cost_of(mb.group(1)), trips)
+                if mc:
+                    total.add(self.cost_of(mc.group(1)), trips)
+                continue
+            if op == "fusion":
+                m = re.search(r"calls=(%?[\w.\-]+)", inst.line)
+                if m:
+                    inner = self.cost_of(m.group(1), as_fusion=True)
+                    total.flops += inner.flops
+                    for k, v in inner.coll_bytes.items():
+                        total.coll_bytes[k] = total.coll_bytes.get(k, 0.0) + v
+                    for k, v in inner.coll_count.items():
+                        total.coll_count[k] = total.coll_count.get(k, 0.0) + v
+                total.hbm_bytes += self._fusion_hbm_bytes(inst, comp)
+                continue
+            if op == "dynamic-slice":
+                total.hbm_bytes += 2 * inst.out_bytes  # read slice + write
+                continue
+            if op == "dynamic-update-slice":
+                ops = _operand_names(inst)
+                upd = _shape_bytes(comp.shapes.get(ops[1], "")) if len(ops) > 1 \
+                    else inst.out_bytes
+                total.hbm_bytes += 2 * upd             # read update + write slice
+                continue
+            if op in ("call", "custom-call"):
+                m = re.search(r"to_apply=(%?[\w.\-]+)", inst.line)
+                if m:
+                    total.add(self.cost_of(m.group(1)), 1.0)
+                elif op == "custom-call":
+                    total.hbm_bytes += inst.out_bytes + _operand_bytes(inst, comp)
+                continue
+            if op == "conditional":
+                for m in re.finditer(r"(?:true_computation|false_computation|"
+                                     r"branch_computations)=\{?([^},]+)", inst.line):
+                    for target in m.group(1).split(","):
+                        total.add(self.cost_of(target.strip()), 1.0)
+                continue
+            if op in _PLUMBING:
+                continue
+            if not as_fusion:
+                # generic op at top level: reads operands, writes output
+                total.hbm_bytes += inst.out_bytes + _operand_bytes(inst, comp)
+        self._memo[key] = total
+        return total
+
+    def entry_cost(self) -> CostTotals:
+        if self.entry is None:
+            return CostTotals()
+        return self.cost_of(self.entry)
+
+
+    # ------------------------------------------------------------------
+    # Attribution: which instructions carry the HBM traffic?
+    # ------------------------------------------------------------------
+
+    def top_hbm(self, n: int = 20) -> List[Tuple[float, str]]:
+        """Top-n instructions by trip-multiplied HBM bytes."""
+        acc: Dict[str, float] = {}
+
+        def walk(name: str, mult: float, depth: int = 0):
+            comp = self.comps.get(name)
+            if comp is None or depth > 32:
+                return
+            for inst in comp.instrs:
+                op = inst.opcode
+                if op in _PLUMBING:
+                    continue
+                if op == "while":
+                    trips = 1
+                    m = _TRIP_RE.search(inst.line)
+                    if m:
+                        trips = int(m.group(1))
+                    mb = re.search(r"body=(%?[\w.\-]+)", inst.line)
+                    if mb:
+                        walk(mb.group(1), mult * trips, depth + 1)
+                    continue
+                if op in ("call",):
+                    m = re.search(r"to_apply=(%?[\w.\-]+)", inst.line)
+                    if m:
+                        walk(m.group(1), mult, depth + 1)
+                    continue
+                if op == "fusion":
+                    b = self._fusion_hbm_bytes(inst, comp)
+                elif op == "dynamic-slice":
+                    b = 2 * inst.out_bytes
+                elif op == "dynamic-update-slice":
+                    ops = _operand_names(inst)
+                    upd = _shape_bytes(comp.shapes.get(ops[1], "")) \
+                        if len(ops) > 1 else inst.out_bytes
+                    b = 2 * upd
+                else:
+                    b = inst.out_bytes + _operand_bytes(inst, comp)
+                if b:
+                    key = f"{op} {inst.shape_text.strip()[:60]}"
+                    meta = re.search(r'op_name="([^"]*)"', inst.line)
+                    if meta:
+                        key += f"  [{meta.group(1)[-70:]}]"
+                    acc[key] = acc.get(key, 0.0) + b * mult
+
+        if self.entry:
+            walk(self.entry, 1.0)
+        return sorted(((v, k) for k, v in acc.items()), reverse=True)[:n]
+
+    def top_collectives(self, n: int = 20) -> List[Tuple[float, str]]:
+        """Top-n collective instructions by trip-multiplied bytes."""
+        acc: Dict[str, float] = {}
+
+        def walk(name: str, mult: float, depth: int = 0):
+            comp = self.comps.get(name)
+            if comp is None or depth > 32:
+                return
+            for inst in comp.instrs:
+                op = inst.opcode
+                if op == "while":
+                    trips = 1
+                    m = _TRIP_RE.search(inst.line)
+                    if m:
+                        trips = int(m.group(1))
+                    mb = re.search(r"body=(%?[\w.\-]+)", inst.line)
+                    if mb:
+                        walk(mb.group(1), mult * trips, depth + 1)
+                    continue
+                if op in ("call", "fusion"):
+                    m = re.search(r"(?:to_apply|calls)=(%?[\w.\-]+)", inst.line)
+                    if m:
+                        walk(m.group(1), mult, depth + 1)
+                    continue
+                kind = next((k for k in COLLECTIVE_KINDS
+                             if op == k or op.startswith(k + "-")), None)
+                if kind:
+                    key = f"{kind} {inst.shape_text.strip()[:70]}"
+                    meta = re.search(r'op_name="([^"]*)"', inst.line)
+                    if meta:
+                        key += f"  [{meta.group(1)[-70:]}]"
+                    acc[key] = acc.get(key, 0.0) + inst.out_bytes * mult
+
+        if self.entry:
+            walk(self.entry, 1.0)
+        return sorted(((v, k) for k, v in acc.items()), reverse=True)[:n]
+
+
+def analyze_text(hlo_text: str) -> CostTotals:
+    return HloCostModel(hlo_text).entry_cost()

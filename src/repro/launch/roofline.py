@@ -1,0 +1,152 @@
+"""Roofline-term derivation from a compiled (dry-run) artifact.
+
+Three terms, each in seconds (TPU v5e constants from ``mesh.py``):
+
+    compute    = HLO_FLOPs / (chips * 197 TFLOP/s)
+    memory     = HLO_bytes / (chips * 819 GB/s)
+    collective = collective_bytes / (chips * 50 GB/s/link)
+
+``compiled.cost_analysis()`` supplies per-device FLOPs and bytes accessed;
+collective bytes are parsed out of the optimized HLO text by summing the
+*output* sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (output size == bytes placed on
+the wire per device for AG/AR-bidirectional convention; we use it uniformly
+and document the convention in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+from .mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# one shape literal, e.g.  bf16[16,4096,7168]  or  f32[] (scalar)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# an HLO instruction line:   %name = <shape or tuple> opcode(
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+([\w\-]+)\(")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    """Total bytes of all shape literals in a (possibly tuple) shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_text, opcode = m.groups()
+        kind = next((k for k in COLLECTIVE_KINDS
+                     if opcode == k or opcode.startswith(k + "-")), None)
+        if kind is None:
+            continue
+        b = _shape_bytes(shape_text)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float                   # per device
+    hbm_bytes: float               # per device
+    collective_bytes: float        # per device
+    chips: int
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.flops / PEAK_FLOPS_BF16
+        self.memory_s = self.hbm_bytes / HBM_BW
+        self.collective_s = self.collective_bytes / ICI_BW_PER_LINK
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic (perfect-overlap) step-time bound: max of the terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "flops_per_dev": self.flops, "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.collective_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "bound_s": self.step_time_s,
+        }
+
+
+def analyze(compiled, mesh) -> Dict:
+    """All roofline-relevant numbers from one compiled executable.
+
+    FLOPs/bytes come from the hierarchical HLO cost model (hlo_cost.py),
+    which multiplies while-loop bodies by their known trip counts --
+    ``compiled.cost_analysis()`` counts each loop body exactly once and
+    underestimates scanned-layer programs by orders of magnitude (verified
+    in tests/test_hlo_cost.py).  cost_analysis values are kept alongside
+    for reference.
+    """
+    from . import hlo_cost
+    chips = mesh.devices.size
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    text = compiled.as_text()
+    totals = hlo_cost.analyze_text(text)
+    coll = CollectiveStats(
+        bytes_by_kind={k: int(v) for k, v in totals.coll_bytes.items()},
+        count_by_kind={k: int(v) for k, v in totals.coll_count.items()})
+    rl = Roofline(flops=totals.flops, hbm_bytes=totals.hbm_bytes,
+                  collective_bytes=float(coll.total_bytes), chips=chips)
+    mem = compiled.memory_analysis()
+    memory = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+        + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+    }
+    return {"roofline": rl, "collectives": coll, "memory": memory,
+            "cost": dict(cost),
+            "xla_cost_flops_once": float(cost.get("flops", 0.0))}

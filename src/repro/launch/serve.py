@@ -1,0 +1,86 @@
+"""Batched serving loop: prefill + decode with a static KV cache.
+
+``Server`` drives the same ``serve_step``/``prefill_step`` the dry-run
+lowers, against a real (small) model on whatever devices exist.  Requests
+are batched greedily; generation is temperature sampling off the
+vocab-sharded logits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.models import sharding, transformer as T
+from repro.models.config import ArchConfig
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0      # 0 => greedy
+
+
+class Server:
+    def __init__(self, cfg: ArchConfig, *, max_batch: int = 8,
+                 max_seq: int = 256, mesh: Optional[Mesh] = None, seed: int = 0):
+        assert cfg.supports_decode, "encoder-only archs cannot be served"
+        sharding.set_mesh(mesh)
+        self.cfg = cfg
+        self.model = T.build(cfg)
+        self.max_batch, self.max_seq = max_batch, max_seq
+        key = jax.random.PRNGKey(seed)
+        self.params, _ = T.init_params(self.model, key)
+        self.key = jax.random.fold_in(key, 7)
+
+        def step(params, cache, tokens, pos):
+            return T.serve_step(self.model, params, cache, tokens, pos)
+
+        self._step = jax.jit(step, donate_argnums=(1,))
+
+    def load_params(self, params):
+        self.params = params
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        lf = logits[:, -1].astype(jnp.float32)
+        if temperature <= 0.0:
+            return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+        self.key, k = jax.random.split(self.key)
+        return jax.random.categorical(k, lf / temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, requests: List[Request]) -> List[np.ndarray]:
+        """Greedy batched generation: one shared cache, per-request lengths."""
+        assert len(requests) <= self.max_batch
+        b = len(requests)
+        cache = T.init_cache(self.model, b, self.max_seq)
+        max_prompt = max(len(r.prompt) for r in requests)
+        max_new = max(r.max_new_tokens for r in requests)
+
+        # teacher-forced prefill via repeated decode steps (token-parallel
+        # prefill exists as prefill_step; the step loop keeps the example
+        # dependency-free of cache plumbing between the two paths)
+        toks = np.zeros((b, max_prompt), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, max_prompt - len(r.prompt):] = r.prompt  # left-pad
+        outs = [[] for _ in range(b)]
+        last = None
+        for t in range(max_prompt + max_new - 1):
+            if t < max_prompt:
+                cur = jnp.asarray(toks[:, t:t + 1])
+            else:
+                cur = last
+            logits, cache = self._step(self.params, cache, cur,
+                                       jnp.int32(t))
+            nxt = self._sample(logits, max(r.temperature for r in requests))
+            last = nxt[:, None]
+            if t >= max_prompt - 1:
+                arr = np.asarray(nxt)
+                for i, r in enumerate(requests):
+                    if len(outs[i]) < r.max_new_tokens:
+                        outs[i].append(int(arr[i]))
+        return [np.asarray(o, np.int32) for o in outs]

@@ -1,0 +1,138 @@
+"""Mamba (S6 selective state-space) block for the Jamba hybrid.
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t     (per channel, d_state wide)
+    y_t = C_t h_t + D x_t
+
+with input-dependent (selective) dt, B, C.  The sequence recurrence is a
+``lax.scan``; decode carries (conv window, ssm state) -- O(1) per token.
+
+Sharding: d_inner over ``model`` (the inner channels are independent, so the
+scan needs no cross-shard communication -- the TPU-friendly property that
+makes Jamba's 1:7 Mamba:attention ratio cheap on the ICI).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import sharding
+from .config import ArchConfig
+from .layers import dtype_of
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, d_conv - 1, d_inner) trailing inputs for the conv
+    ssm: jax.Array   # (B, d_inner, d_state) recurrent state
+
+
+def dt_rank(cfg: ArchConfig) -> int:
+    return max(cfg.d_model // 16, 1)
+
+
+def init_mamba(key: jax.Array, cfg: ArchConfig):
+    d, di, ds, dc = cfg.d_model, cfg.d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    r = dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    dt = dtype_of(cfg)
+    params = {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) * dc ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": (jax.random.normal(ks[2], (di, r + 2 * ds)) * di ** -0.5).astype(dt),
+        "dt_proj_w": (jax.random.normal(ks[3], (r, di)) * r ** -0.5).astype(dt),
+        "dt_proj_b": jnp.log(jnp.exp(
+            jnp.exp(jax.random.uniform(ks[4], (di,), minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))) - 1.0) + 1e-9
+                             ).astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (di, d)) * di ** -0.5).astype(dt),
+    }
+    specs = {
+        "in_proj": P(None, "model"), "conv_w": P(None, "model"),
+        "conv_b": P("model"), "x_proj": P("model", None),
+        "dt_proj_w": P(None, "model"), "dt_proj_b": P("model"),
+        "A_log": P("model", None), "D": P("model"),
+        "out_proj": P("model", None),
+    }
+    return params, specs
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.d_inner, cfg.mamba_d_state), jnp.float32),
+    )
+
+
+def _selective(cfg: ArchConfig, params, xc: jax.Array):
+    """dt, B, C streams from the conv output.  xc: (..., d_inner)."""
+    r, ds = dt_rank(cfg), cfg.mamba_d_state
+    proj = xc @ params["x_proj"]
+    dt_in, bb, cc = jnp.split(proj, [r, r + ds], axis=-1)
+    dt = jax.nn.softplus((dt_in @ params["dt_proj_w"]).astype(jnp.float32)
+                         + params["dt_proj_b"])                    # (..., di)
+    return dt, bb.astype(jnp.float32), cc.astype(jnp.float32)
+
+
+def mamba_block(cfg: ArchConfig, params, x: jax.Array, state: MambaState):
+    """Full-sequence Mamba.  x: (B, S, d) -> (y, new_state)."""
+    b, s, d = x.shape
+    di, ds, dc = cfg.d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+
+    xz = x @ params["in_proj"]                                    # (B, S, 2*di)
+    xz = sharding.constraint(xz, P(sharding.batch_axes(), None, "model"))
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv over time, warm-started from state.conv
+    xpad = jnp.concatenate([state.conv.astype(xi.dtype), xi], axis=1)
+    conv = sum(xpad[:, i:i + s] * params["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu(conv + params["conv_b"])
+
+    dt, bb, cc = _selective(cfg, params, xc)                      # (B,S,di),(B,S,ds)x2
+    a = -jnp.exp(params["A_log"])                                 # (di, ds)
+    xf = xc.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp                                 # (B,di),(B,ds),(B,ds),(B,di)
+        da = jnp.exp(dt_t[..., None] * a[None])                   # (B, di, ds)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(bb, 1, 0),
+          jnp.moveaxis(cc, 1, 0), jnp.moveaxis(xf, 1, 0))
+    h_fin, ys = jax.lax.scan(step, state.ssm, xs)                 # ys (S, B, di)
+    y = jnp.moveaxis(ys, 0, 1) + xf * params["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    y = sharding.constraint(y, P(sharding.batch_axes(), None, None))
+    new_state = MambaState(conv=xi[:, s - (dc - 1):].astype(state.conv.dtype)
+                           if s >= dc - 1 else
+                           jnp.concatenate([state.conv, xi], axis=1)[:, -(dc - 1):],
+                           ssm=h_fin)
+    return y, new_state
+
+
+def decode_step(cfg: ArchConfig, params, x: jax.Array, state: MambaState):
+    """One-token Mamba step.  x: (B, 1, d)."""
+    b = x.shape[0]
+    di, dc = cfg.d_inner, cfg.mamba_d_conv
+    xz = x[:, 0] @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                             # (B, di)
+
+    window = jnp.concatenate([state.conv.astype(xi.dtype), xi[:, None]], axis=1)  # (B, dc, di)
+    conv = jnp.einsum("bcd,cd->bd", window, params["conv_w"])
+    xc = jax.nn.silu(conv + params["conv_b"])
+
+    dt, bb, cc = _selective(cfg, params, xc)
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt[..., None] * a[None])
+    h = da * state.ssm + (dt * xc.astype(jnp.float32))[..., None] * bb[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, cc) + xc.astype(jnp.float32) * params["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    return y[:, None], MambaState(conv=window[:, 1:].astype(state.conv.dtype), ssm=h)

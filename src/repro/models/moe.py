@@ -1,0 +1,159 @@
+"""Mixture-of-Experts FFN with expert-parallel sharding.
+
+GShard-style capacity dispatch, adapted to the TPU mesh:
+
+* expert weights are sharded 2-D: experts over ``model`` and the FFN hidden
+  dim over ``data`` (ZeRO-style) when both divide -- a 1T-param MoE (Kimi K2)
+  only fits HBM with this 256-way expert-weight sharding;
+* tokens are routed top-k with a per-group capacity ``C = G*k/E * cf``;
+  dispatch/combine are einsums against a one-hot (G, E, C) tensor, which
+  GSPMD turns into the all-to-all between the ``data`` (token) and ``model``
+  (expert) axes -- the collective the roofline analysis attributes to MoE;
+* tokens are processed in groups (sequence chunks) so the dispatch one-hot
+  stays small; groups are a vmapped leading dim.
+
+Router load-balance: the standard aux loss (mean gate fraction * mean router
+prob per expert, scaled by E) is returned for the trainer to add.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import sharding
+from .config import ArchConfig
+from .layers import dtype_of
+
+
+def _expert_ff_axis(cfg: ArchConfig) -> Tuple:
+    """(expert_axis_spec, ff_axis_spec) for (E, d, ff) expert weights."""
+    e = cfg.n_experts
+    model = sharding.axis_size("model")
+    data = sharding.axis_size("data")
+    ff = cfg.moe_d_ff or cfg.d_ff
+    e_ax = "model" if (model > 1 and e % model == 0) else None
+    ff_ax = "data" if (data > 1 and ff % data == 0) else None
+    return e_ax, ff_ax
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig):
+    d, e = cfg.d_model, cfg.n_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 7)
+    dt = dtype_of(cfg)
+    params = {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, ff)) * d ** -0.5).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (e, d, ff)) * d ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (e, ff, d)) * ff ** -0.5).astype(dt),
+    }
+    e_ax, ff_ax = _expert_ff_axis(cfg)
+    specs = {
+        "router": P(None, None),
+        "w_gate": P(e_ax, None, ff_ax),
+        "w_up": P(e_ax, None, ff_ax),
+        "w_down": P(e_ax, ff_ax, None),
+    }
+    if cfg.shared_experts:
+        se_ff = ff * cfg.shared_experts
+        params.update({
+            "sh_gate": (jax.random.normal(ks[4], (d, se_ff)) * d ** -0.5).astype(dt),
+            "sh_up": (jax.random.normal(ks[5], (d, se_ff)) * d ** -0.5).astype(dt),
+            "sh_down": (jax.random.normal(ks[6], (se_ff, d)) * se_ff ** -0.5).astype(dt),
+        })
+        specs.update({"sh_gate": P(None, "model"), "sh_up": P(None, "model"),
+                      "sh_down": P("model", None)})
+    return params, specs
+
+
+def _capacity(cfg: ArchConfig, group: int) -> int:
+    c = int(group * cfg.top_k / cfg.n_experts * cfg.capacity_factor) + 1
+    return max(c, cfg.top_k)
+
+
+def moe_ffn(cfg: ArchConfig, params, x: jax.Array, *, group: int = 1024):
+    """MoE FFN.  x: (B, S, d) -> (y, aux_loss).
+
+    Tokens are reshaped into (n_groups, G, d); dispatch runs per group.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    g = min(group, b * s)
+    n_tok = b * s
+    # pad token count to a multiple of the group size
+    n_groups = -(-n_tok // g)
+    xt = x.reshape(n_tok, d)
+    pad = n_groups * g - n_tok
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xg = xt.reshape(n_groups, g, d)
+    xg = sharding.constraint(xg, P(sharding.batch_axes(), None, None))
+
+    logits = (xg.astype(jnp.float32) @ params["router"])          # (n, G, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                 # (n, G, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- capacity assignment --------------------------------------------
+    c = _capacity(cfg, g)
+    dt = x.dtype
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)       # (n, G, k, E)
+    # position of each (token, slot) within its expert queue (f32 exact
+    # for counts up to 2^24; the dispatch/combine tensors themselves are
+    # cast to the model dtype so no f32 leaks into the xe collectives --
+    # §Perf kimi iteration 5)
+    pos = jnp.cumsum(onehot.reshape(n_groups, g * k, e), axis=1).reshape(
+        n_groups, g, k, e) - 1.0
+    keep = (pos < c) & (onehot > 0)
+    pos = jnp.sum(pos * onehot, axis=-1)                          # (n, G, k)
+    cap_onehot = jax.nn.one_hot(pos.astype(jnp.int32), c, dtype=dt)
+    kept = (onehot * keep).astype(dt)
+    # dispatch tensor (n, G, E, C)
+    dispatch = jnp.einsum("ngke,ngkc->ngec", kept, cap_onehot,
+                          preferred_element_type=dt)
+    combine = jnp.einsum("ngk,ngke,ngkc->ngec",
+                         gate_vals.astype(dt), kept, cap_onehot,
+                         preferred_element_type=dt)
+
+    # Sharding note (EXPERIMENTS.md §Perf, kimi iteration 1 -- refuted
+    # hypothesis): keeping the group dim on `data` through the expert
+    # compute forces ZeRO-sharded expert weights to be all-gathered every
+    # microbatch (8.5e12 B/dev vs 3.8e12 baseline).  Replicating the group
+    # dim lets GSPMD gather token-proportional activations instead, which
+    # is cheaper for a 1T-param MoE where weights >> activations.
+    # bf16 partial-sum accumulation (preferred_element_type) halves the
+    # cross-device reductions of the dispatch/expert einsums (iteration 2).
+    xe = jnp.einsum("ngec,ngd->necd", dispatch, xg,
+                    preferred_element_type=dt)                    # (n, E, C, d)
+    e_ax, ff_ax = _expert_ff_axis(cfg)
+    xe = sharding.constraint(xe, P(None, e_ax, None, None))
+
+    hidden = jax.nn.silu(
+        jnp.einsum("necd,edf->necf", xe, params["w_gate"],
+                   preferred_element_type=dt)) \
+        * jnp.einsum("necd,edf->necf", xe, params["w_up"],
+                     preferred_element_type=dt)
+    hidden = sharding.constraint(hidden, P(None, e_ax, None, ff_ax))
+    ye = jnp.einsum("necf,efd->necd", hidden, params["w_down"],
+                    preferred_element_type=dt)
+    ye = sharding.constraint(ye, P(None, e_ax, None, None))
+
+    y = jnp.einsum("ngec,necd->ngd", combine, ye,
+                   preferred_element_type=dt)                     # (n, G, d)
+    y = y.reshape(n_groups * g, d)[:n_tok].reshape(b, s, d)
+    y = sharding.constraint(y, P(sharding.batch_axes(), None, None))
+
+    if cfg.shared_experts:
+        sh = jax.nn.silu(x @ params["sh_gate"]) * (x @ params["sh_up"])
+        sh = sharding.constraint(sh, P(sharding.batch_axes(), None, "model"))
+        y = y + sh @ params["sh_down"]
+
+    # ---- load-balance aux loss (Switch/GShard) ---------------------------
+    frac_tokens = jnp.mean(onehot[..., 0, :], axis=(0, 1))        # top-1 fraction
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

@@ -1,0 +1,294 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention + channel mix.
+
+Per head h with key/value dim Dh, the time-mix recurrence over tokens t is
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T            (state S: (Dh, Dh))
+    o_t = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+
+with data-dependent decay w_t = exp(-exp(dd_t)) produced by a LoRA-style
+two-layer projection of the token (the Finch novelty), and a learned bonus u
+for the current token.  Token-shift interpolation (lerp between x_t and
+x_{t-1} with learned + data-dependent mix) feeds the r/k/v/w/g projections.
+
+Training runs the recurrence with ``lax.scan`` over time (one HLO while
+loop -- compile-friendly at any depth); decode carries (S, x_prev) as
+explicit state -- O(1) per token, which is what makes the 500k-context
+shape runnable.
+
+Sharding: heads over ``model``; FFN hidden over ``model``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import sharding
+from .config import ArchConfig
+from .layers import dtype_of
+
+DECAY_LORA = 64
+
+
+class RWKVState(NamedTuple):
+    s: jax.Array        # (B, H, Dh, Dh) time-mix matrix state
+    x_prev_tm: jax.Array  # (B, d) previous token input (time-mix shift)
+    x_prev_cm: jax.Array  # (B, d) previous token input (channel-mix shift)
+
+
+def head_layout(cfg: ArchConfig) -> Tuple[int, int]:
+    """(n_heads, head_dim) for the RWKV time-mix (64-dim heads)."""
+    dh = 64
+    return cfg.d_model // dh, dh
+
+
+def init_rwkv(key: jax.Array, cfg: ArchConfig):
+    d = cfg.d_model
+    h, dh = head_layout(cfg)
+    ks = jax.random.split(key, 12)
+    dt = dtype_of(cfg)
+    std = d ** -0.5
+    params = {
+        # token-shift mix coefficients (r, k, v, w, g) + channel-mix (k)
+        "mu": jnp.full((5, d), 0.5, dt),
+        "mu_cm": jnp.full((1, d), 0.5, dt),
+        "w_r": (jax.random.normal(ks[0], (d, d)) * std).astype(dt),
+        "w_k": (jax.random.normal(ks[1], (d, d)) * std).astype(dt),
+        "w_v": (jax.random.normal(ks[2], (d, d)) * std).astype(dt),
+        "w_g": (jax.random.normal(ks[3], (d, d)) * std).astype(dt),
+        "w_o": (jax.random.normal(ks[4], (d, d)) * std).astype(dt),
+        # data-dependent decay LoRA:  dd = tanh(x W1) W2 + bias
+        "decay_w1": (jax.random.normal(ks[5], (d, DECAY_LORA)) * std).astype(dt),
+        "decay_w2": (jax.random.normal(ks[6], (DECAY_LORA, d)) * 0.01).astype(dt),
+        "decay_bias": jnp.full((d,), -6.0, jnp.float32),  # slow default decay
+        "bonus_u": (jax.random.normal(ks[7], (h, dh)) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.zeros((d,), dt),  # group-norm scale on the head outputs
+        # channel mix
+        "cm_k": (jax.random.normal(ks[8], (d, cfg.d_ff)) * std).astype(dt),
+        "cm_v": (jax.random.normal(ks[9], (cfg.d_ff, d)) * cfg.d_ff ** -0.5).astype(dt),
+    }
+    specs = {
+        "mu": P(None, None), "mu_cm": P(None, None),
+        "w_r": P(None, "model"), "w_k": P(None, "model"),
+        "w_v": P(None, "model"), "w_g": P(None, "model"),
+        "w_o": P("model", None),
+        "decay_w1": P(None, None), "decay_w2": P(None, "model"),
+        "decay_bias": P("model"), "bonus_u": P("model", None),
+        "ln_x": P(None),
+        "cm_k": P(None, "model"), "cm_v": P("model", None),
+    }
+    return params, specs
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> RWKVState:
+    h, dh = head_layout(cfg)
+    return RWKVState(
+        s=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        x_prev_tm=jnp.zeros((batch, cfg.d_model), dtype),
+        x_prev_cm=jnp.zeros((batch, cfg.d_model), dtype),
+    )
+
+
+def _projections(cfg: ArchConfig, params, x: jax.Array, x_shift: jax.Array):
+    """r, k, v, g, decay(w) streams for time-mix.  x: (..., d).
+
+    The five token-shift lerps share the identity  lerp_i @ W_i =
+    x @ W_i + ((x_shift - x) * mu_i) @ W_i, so the r/k/v/g streams are two
+    wide (d -> 4d) matmuls instead of four narrow ones over four distinct
+    (B,S,d) lerp intermediates -- §Perf rwkv iteration 3 (fewer residency
+    buffers, MXU-friendlier shapes).
+    """
+    mu = params["mu"].astype(x.dtype)
+    delta = x_shift - x
+    w_all = jnp.concatenate(
+        [params["w_r"], params["w_k"], params["w_v"], params["w_g"]], axis=-1)
+    d = x.shape[-1]
+    base = x @ w_all                                     # (..., 4d)
+    # per-stream mu folds into the delta operand, stream-blocked
+    mu_block = jnp.concatenate(
+        [jnp.broadcast_to(mu[i][..., None], (d, 1)) * w
+         for i, w in ((0, params["w_r"]), (1, params["w_k"]),
+                      (2, params["w_v"]), (4, params["w_g"]))], axis=-1)
+    shift = delta @ mu_block                             # (..., 4d)
+    rkvg = base + shift
+    r, k, v, g = jnp.split(rkvg, 4, axis=-1)
+    g = jax.nn.silu(g)
+    lerp_w = x + mu[3] * delta
+    dd = jnp.tanh(lerp_w @ params["decay_w1"]) @ params["decay_w2"]
+    logw = -jnp.exp(jnp.clip(dd.astype(jnp.float32)
+                             + params["decay_bias"], -20.0, 8.0))
+    return r, k, v, g, logw  # decay w = exp(logw) in (0, 1), per channel
+
+
+def _heads(x: jax.Array, h: int, dh: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (h, dh))
+
+
+def _time_mix_sequential(rf, kf, vf, logw, u, s0):
+    """Per-token recurrence (reference / paper-faithful baseline).
+
+    rf/kf/vf/logw: (B, S, H, Dh) float32; u: (H, Dh); s0: (B, H, Dh, Dh).
+    Returns (out (B,S,H,Dh) f32, s_fin).
+    """
+    w = jnp.exp(logw)
+
+    def step(s_carry, inp):
+        rt, kt, vt, wt = inp                                      # (B,H,Dh)...
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, s_carry + u[None, :, :, None] * kv)
+        s_new = wt[..., None] * s_carry + kv
+        return s_new, ot
+
+    xs = (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(w, 1, 0))
+    s_fin, outs = jax.lax.scan(step, s0, xs)                      # (S,B,H,Dh)
+    return jnp.moveaxis(outs, 0, 1), s_fin
+
+
+def _time_mix_chunked(rf, kf, vf, logw, u, s0, *, chunk: int):
+    """Chunked closed form of the same recurrence (beyond-paper perf path).
+
+    Within a chunk of C tokens the recurrence unrolls to matmuls:
+
+      o_t   = (r_t . A_{t-1}) S_in  +  sum_{s<t} (r_t k_s exp(c_{t-1}-c_s)) v_s
+              + (r_t . u . k_t) v_t
+      S_out = A_C . S_in + sum_s (k_s exp(c_C - c_s)) v_s
+
+    with c_t = cumsum(log w) (<= 0, so every exp argument is bounded by 0
+    after causal masking -- numerically safe).  State HBM traffic drops
+    from O(S) reads/writes of (B,H,Dh,Dh) to O(S/C).
+    """
+    b, s, h, dh = rf.shape
+    out_dtype = rf.dtype
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        rf, kf, vf = z(rf), z(kf), z(vf)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    def to_chunks(t):  # (B, S, H, Dh) -> (n, B, C, H, Dh)
+        return jnp.moveaxis(
+            t.reshape(b, n_chunks, chunk, h, dh), 1, 0)
+
+    rc, kc, vc, lwc = map(to_chunks, (rf, kf, vf, logw))
+
+    tri_lower_strict = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+
+    def chunk_step(s_in, inp):
+        r, k, v, lw = inp                                         # (B,C,H,Dh)
+        # per-chunk f32 math over small slices; streams stay in the model
+        # dtype between chunks (HBM traffic, iteration 2 of §Perf rwkv)
+        r = r.astype(jnp.float32)
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+        cum = jnp.cumsum(lw.astype(jnp.float32), axis=1)          # c_t (incl.)
+        cum_prev = cum - lw                                       # c_{t-1}
+        a_prev = jnp.exp(cum_prev)
+        # inter-chunk: (r_t . A_{t-1}) S_in
+        o_inter = jnp.einsum("bthk,bhkv->bthv", r * a_prev, s_in)
+        # intra-chunk: pairwise decay exp(c_{t-1} - c_s), s < t
+        diff = cum_prev[:, :, None] - cum[:, None, :]             # (B,t,s,H,Dh)
+        dmat = jnp.exp(jnp.minimum(diff, 0.0))
+        p = jnp.einsum("bthk,bshk,btshk->bths", r, k, dmat)
+        p = p * tri_lower_strict[None, :, None, :]
+        o_intra = jnp.einsum("bths,bshv->bthv", p, v)
+        # current-token bonus
+        o_diag = jnp.einsum("bthk,hk,bthk->bth", r, u, k)[..., None] * v
+        # state update
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)              # c_C - c_s
+        a_end = jnp.exp(cum[:, -1])                               # (B,H,Dh)
+        s_out = a_end[..., None] * s_in + jnp.einsum(
+            "bshk,bshv->bhkv", k * decay_to_end, v)
+        return s_out, (o_inter + o_intra + o_diag).astype(out_dtype)
+
+    s_fin, outs = jax.lax.scan(chunk_step, s0, (rc, kc, vc, lwc))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n_chunks * chunk, h, dh)[:, :s]
+    return out, s_fin
+
+
+def time_mix_chunk(cfg: ArchConfig, params, x: jax.Array, state: RWKVState,
+                   *, chunk: int = 0):
+    """Time-mix over a full sequence.  x: (B, S, d) -> (out, new_state).
+
+    ``chunk`` (or cfg.scan_chunk) > 0 selects the chunked closed form;
+    0 runs the per-token reference recurrence.
+    """
+    b, s, d = x.shape
+    h, dh = head_layout(cfg)
+    chunk = chunk or cfg.scan_chunk
+    # token shift: previous token (state carries the boundary)
+    x_shift = jnp.concatenate([state.x_prev_tm[:, None], x[:, :-1]], axis=1)
+    r, k, v, g, logw_full = _projections(cfg, params, x, x_shift)
+    r, k, v = _heads(r, h, dh), _heads(k, h, dh), _heads(v, h, dh)
+    u = params["bonus_u"]                                         # (H, Dh)
+
+    logw = _heads(logw_full, h, dh)
+
+    # f32 streams measured *cheaper* than bf16 streams here (bf16 splits
+    # the chunk fusions with converts; §Perf rwkv iteration 2, refuted)
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if chunk and s > 1:
+        outs, s_fin = _time_mix_chunked(rf, kf, vf, logw, u, state.s,
+                                        chunk=chunk)
+    else:
+        outs, s_fin = _time_mix_sequential(rf, kf, vf, logw, u, state.s)
+    out = outs.reshape(b, s, d).astype(x.dtype)
+
+    # per-head group norm then gate
+    out = out.reshape(b, s, h, dh)
+    mean = jnp.mean(out.astype(jnp.float32), axis=-1, keepdims=True)
+    var = jnp.var(out.astype(jnp.float32), axis=-1, keepdims=True)
+    out = ((out - mean) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+    out = out.reshape(b, s, d) * (1.0 + params["ln_x"])
+    out = (out * g) @ params["w_o"]
+    out = sharding.constraint(out, P(sharding.batch_axes(), None, None))
+    new_state = RWKVState(s=s_fin, x_prev_tm=x[:, -1], x_prev_cm=state.x_prev_cm)
+    return out, new_state
+
+
+def channel_mix(cfg: ArchConfig, params, x: jax.Array, state: RWKVState):
+    """RWKV channel-mix (squared-ReLU FFN with token shift)."""
+    x_shift = jnp.concatenate([state.x_prev_cm[:, None], x[:, :-1]], axis=1)
+    mu = params["mu_cm"][0].astype(x.dtype)
+    xk = x + mu * (x_shift - x)
+    hidden = jnp.square(jax.nn.relu(xk @ params["cm_k"]))
+    hidden = sharding.constraint(hidden, P(sharding.batch_axes(), None, "model"))
+    out = hidden @ params["cm_v"]
+    out = sharding.constraint(out, P(sharding.batch_axes(), None, None))
+    return out, RWKVState(s=state.s, x_prev_tm=state.x_prev_tm, x_prev_cm=x[:, -1])
+
+
+def decode_step(cfg: ArchConfig, params, x: jax.Array, state: RWKVState):
+    """One-token time-mix + channel-mix.  x: (B, 1, d)."""
+    b = x.shape[0]
+    h, dh = head_layout(cfg)
+    xt = x[:, 0]
+    r, k, v, g, logw = _projections(cfg, params, xt, state.x_prev_tm)
+    w = jnp.exp(logw)
+    r, k, v, w = (_heads(t, h, dh) for t in (r, k, v, w))
+    u = params["bonus_u"]
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    o = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32),
+                   state.s + u[None, :, :, None] * kv)
+    s_new = w.astype(jnp.float32)[..., None] * state.s + kv
+
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = ((o - mean) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+    o = o.reshape(b, cfg.d_model) * (1.0 + params["ln_x"])
+    tm_out = (o * g) @ params["w_o"]
+
+    return tm_out[:, None], RWKVState(s=s_new, x_prev_tm=xt, x_prev_cm=state.x_prev_cm)
+
+
+def decode_channel_mix(cfg: ArchConfig, params, x: jax.Array, state: RWKVState):
+    xt = x[:, 0]
+    mu = params["mu_cm"][0].astype(x.dtype)
+    xk = xt + mu * (state.x_prev_cm - xt)
+    out = jnp.square(jax.nn.relu(xk @ params["cm_k"])) @ params["cm_v"]
+    return out[:, None], RWKVState(s=state.s, x_prev_tm=state.x_prev_tm, x_prev_cm=xt)

@@ -1,0 +1,476 @@
+"""Model assembly: layer plans -> scanned parameter stacks -> train/serve fns.
+
+The layer sequence of every assigned architecture is *periodic* (possibly
+after a short prefix -- e.g. Kimi K2's first dense layer):
+
+    plans = [plan(0), ..., plan(L-1)],  plan = (mixer_kind, ffn_kind)
+
+``plan_groups`` factors it into (prefix, pattern, n_rep); parameters of the
+``n_rep`` repetitions are *stacked* (leading dim n_rep) and iterated with
+``lax.scan`` -- the compiled HLO contains one body per distinct plan, which
+keeps 512-device compiles tractable and mirrors MaxText's scanned-layers
+practice.  ``remat`` wraps the scan body (full activation rematerialisation).
+
+Modality handling (the one sanctioned stub):
+* audio (hubert):   inputs are precomputed frame embeddings (B, S, d);
+* vlm (qwen2-vl):   token ids + image patch embeddings (B, n_img, d) that
+  overwrite the first n_img token slots; M-RoPE takes (B, S, 3) positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from . import rwkv6 as rwkv_mod
+from . import sharding
+from .config import ArchConfig
+from .layers import attention, decode_attention, dtype_of, init_attn, init_ffn, ffn, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Layer plans -> (prefix, pattern, n_rep)
+# ---------------------------------------------------------------------------
+
+
+def plan_groups(cfg: ArchConfig) -> Tuple[List, List, int]:
+    plans = [cfg.layer_plan(i) for i in range(cfg.n_layers)]
+    # strip a non-repeating prefix (leading dense layers of MoE stacks)
+    prefix_len = 0
+    if cfg.moe and cfg.first_dense_layers:
+        prefix_len = cfg.first_dense_layers
+    prefix, rest = plans[:prefix_len], plans[prefix_len:]
+    for p in range(1, len(rest) + 1):
+        if len(rest) % p == 0 and rest == rest[:p] * (len(rest) // p):
+            return prefix, rest[:p], len(rest) // p
+    return prefix, rest, 1
+
+
+# ---------------------------------------------------------------------------
+# Single-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key: jax.Array, cfg: ArchConfig, plan) -> Tuple[Dict, Dict]:
+    mixer, ffn_kind = plan
+    d = cfg.d_model
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    params: Dict[str, Any] = {"ln1": jnp.zeros((d,), dt)}
+    specs: Dict[str, Any] = {"ln1": P(None)}
+
+    if mixer == "attn":
+        params["mixer"], specs["mixer"] = init_attn(k1, cfg)
+    elif mixer == "mamba":
+        params["mixer"], specs["mixer"] = mamba_mod.init_mamba(k1, cfg)
+    elif mixer == "rwkv6":
+        params["mixer"], specs["mixer"] = rwkv_mod.init_rwkv(k1, cfg)
+    else:
+        raise ValueError(mixer)
+
+    if ffn_kind != "rwkv_ffn":  # rwkv channel-mix lives inside its mixer params
+        params["ln2"] = jnp.zeros((d,), dt)
+        specs["ln2"] = P(None)
+        if ffn_kind == "dense":
+            params["ffn"], specs["ffn"] = init_ffn(k2, cfg)
+        elif ffn_kind == "moe":
+            params["ffn"], specs["ffn"] = moe_mod.init_moe(k2, cfg)
+        else:
+            raise ValueError(ffn_kind)
+    return params, specs
+
+
+def apply_layer(cfg: ArchConfig, plan, params, x: jax.Array, positions,
+                *, kv_chunk: int = 1024):
+    """Training / prefill layer.  Returns (x, aux_loss)."""
+    mixer, ffn_kind = plan
+    aux = jnp.zeros((), jnp.float32)
+    if mixer == "attn":
+        x = x + attention(cfg, params["mixer"], rmsnorm(x, params["ln1"]),
+                          positions, kv_chunk=kv_chunk)
+    elif mixer == "mamba":
+        st0 = mamba_mod.init_mamba_state(cfg, x.shape[0], x.dtype)
+        y, _ = mamba_mod.mamba_block(cfg, params["mixer"], rmsnorm(x, params["ln1"]), st0)
+        x = x + y
+    elif mixer == "rwkv6":
+        st0 = rwkv_mod.init_rwkv_state(cfg, x.shape[0], x.dtype)
+        y, st1 = rwkv_mod.time_mix_chunk(cfg, params["mixer"], rmsnorm(x, params["ln1"]), st0)
+        x = x + y
+        y, _ = rwkv_mod.channel_mix(cfg, params["mixer"], rmsnorm(x, params["ln2_rwkv"]), st1)
+        return x + y, aux
+
+    if ffn_kind == "dense":
+        x = x + ffn(params["ffn"], rmsnorm(x, params["ln2"]))
+    elif ffn_kind == "moe":
+        y, aux = moe_mod.moe_ffn(cfg, params["ffn"], rmsnorm(x, params["ln2"]))
+        x = x + y
+    return x, aux
+
+
+def decode_layer(cfg: ArchConfig, plan, params, x: jax.Array, pos,
+                 cache):
+    """One-token decode layer.  Returns (x, new_cache)."""
+    mixer, ffn_kind = plan
+    if mixer == "attn":
+        y, cache = decode_attention(cfg, params["mixer"], rmsnorm(x, params["ln1"]),
+                                    pos, cache)
+        x = x + y
+    elif mixer == "mamba":
+        y, cache = mamba_mod.decode_step(cfg, params["mixer"], rmsnorm(x, params["ln1"]), cache)
+        x = x + y
+    elif mixer == "rwkv6":
+        y, cache = rwkv_mod.decode_step(cfg, params["mixer"], rmsnorm(x, params["ln1"]), cache)
+        x = x + y
+        y, cache = rwkv_mod.decode_channel_mix(
+            cfg, params["mixer"], rmsnorm(x, params["ln2_rwkv"]), cache)
+        return x + y, cache
+
+    if ffn_kind == "dense":
+        x = x + ffn(params["ffn"], rmsnorm(x, params["ln2"]))
+    elif ffn_kind == "moe":
+        y, _ = moe_mod.moe_ffn(cfg, params["ffn"], rmsnorm(x, params["ln2"]))
+        x = x + y
+    return x, cache
+
+
+# rwkv needs a second norm param that is not gated behind ffn_kind
+def _patch_rwkv_lns(cfg: ArchConfig, params: Dict, specs: Dict, plan):
+    if plan[0] == "rwkv6":
+        params["ln2_rwkv"] = jnp.zeros((cfg.d_model,), dtype_of(cfg))
+        specs["ln2_rwkv"] = P(None)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    prefix: List        # list of plans
+    pattern: List       # repeating unit of plans
+    n_rep: int
+
+
+def build(cfg: ArchConfig) -> Model:
+    prefix, pattern, n_rep = plan_groups(cfg)
+    return Model(cfg=cfg, prefix=prefix, pattern=pattern, n_rep=n_rep)
+
+
+def init_params(model: Model, key: jax.Array) -> Tuple[Dict, Dict]:
+    cfg = model.cfg
+    d, v = cfg.d_model, cfg.vocab
+    dt = dtype_of(cfg)
+    keys = jax.random.split(key, 4 + len(model.prefix))
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+
+    if cfg.embed_inputs:
+        params["embed"] = (jax.random.normal(keys[0], (v, d)) * d ** -0.5).astype(dt)
+        specs["embed"] = P("model", None)
+
+    # prefix layers (unstacked)
+    pre_p, pre_s = [], []
+    for i, plan in enumerate(model.prefix):
+        p, s = init_layer(keys[4 + i], cfg, plan)
+        _patch_rwkv_lns(cfg, p, s, plan)
+        pre_p.append(p)
+        pre_s.append(s)
+    params["prefix"] = pre_p
+    specs["prefix"] = pre_s
+
+    # pattern layers, stacked over n_rep
+    pat_p, pat_s = [], []
+    for j, plan in enumerate(model.pattern):
+        def one(k, plan=plan):
+            p, s = init_layer(k, cfg, plan)
+            _patch_rwkv_lns(cfg, p, s, plan)
+            return p
+        ks = jax.random.split(jax.random.fold_in(keys[1], j), model.n_rep)
+        stacked = jax.vmap(one)(ks)
+        p0, s0 = init_layer(jax.random.fold_in(keys[1], j), cfg, plan)
+        _patch_rwkv_lns(cfg, p0, s0, plan)
+        sspec = jax.tree.map(lambda sp: P(None, *sp), s0,
+                             is_leaf=lambda t: isinstance(t, P))
+        pat_p.append(stacked)
+        pat_s.append(sspec)
+    params["pattern"] = pat_p
+    specs["pattern"] = pat_s
+
+    params["final_norm"] = jnp.zeros((d,), dt)
+    specs["final_norm"] = P(None)
+    params["head"] = (jax.random.normal(keys[2], (d, v)) * d ** -0.5).astype(dt)
+    specs["head"] = P(None, "model")
+    return params, specs
+
+
+def abstract_init(model: Model):
+    """(params ShapeDtypeStructs, specs) without allocating anything.
+
+    Specs are plain Python metadata created during tracing, so they can be
+    captured by side effect under ``jax.eval_shape``.
+    """
+    box = {}
+
+    def f(key):
+        p, s = init_params(model, key)
+        box["specs"] = s
+        return p
+
+    sds = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return sds, box["specs"]
+
+
+def fsdp_specs(params, specs, *, min_size: int = 2 ** 16):
+    """ZeRO-3 refinement: shard one replicated dim of each large leaf on ``data``.
+
+    Picks the largest dim that is currently None and divides the data-axis
+    size; leaves small leaves (norms, biases) replicated.
+    """
+    data = sharding.axis_size("data")
+    if data <= 1:
+        return specs
+
+    def refine(leaf, spec):
+        if not isinstance(spec, P) or leaf.size < min_size:
+            return spec
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        if "data" in entries:
+            return spec
+        cands = [i for i, (ax, n) in enumerate(zip(entries, leaf.shape))
+                 if ax is None and n % data == 0]
+        if not cands:
+            return spec
+        best = max(cands, key=lambda i: leaf.shape[i])
+        entries[best] = "data"
+        return P(*entries)
+
+    # P is a tuple subclass => jax.tree would descend into it; flatten the
+    # spec tree with an explicit is_leaf and zip against the param leaves.
+    flat_specs, sdef = jax.tree.flatten(specs, is_leaf=lambda t: isinstance(t, P))
+    flat_params = jax.tree.leaves(params)
+    assert len(flat_specs) == len(flat_params)
+    return jax.tree.unflatten(sdef, [refine(l, s) for l, s in zip(flat_params, flat_specs)])
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(model: Model, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    cfg = model.cfg
+    if not cfg.embed_inputs:                      # audio: frame embeddings
+        x = batch["inputs"].astype(dtype_of(cfg))
+    else:
+        tok = batch["tokens"]
+        x = jnp.take(params["embed"], tok, axis=0)
+        if cfg.vlm_image_tokens and "image_embeds" in batch:
+            img = batch["image_embeds"].astype(x.dtype)   # (B, n_img, d)
+            n_img = img.shape[1]
+            x = jnp.concatenate([img, x[:, n_img:]], axis=1)
+    return sharding.constraint(x, P(sharding.batch_axes(), None, None))
+
+
+def positions_for(model: Model, batch: Dict[str, jax.Array], s: int) -> jax.Array:
+    cfg = model.cfg
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.arange(s)[None]
+    if cfg.rope_kind == "mrope":
+        pos = jnp.broadcast_to(pos[..., None], (1, s, 3))
+    return pos
+
+
+def forward(model: Model, params, batch: Dict[str, jax.Array],
+            *, kv_chunk: int = 1024):
+    """Returns (logits_bf16 (B,S,V) vocab-sharded, aux_loss)."""
+    cfg = model.cfg
+    x = embed_inputs(model, params, batch)
+    s = x.shape[1]
+    positions = positions_for(model, batch, s)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for plan, p in zip(model.prefix, params["prefix"]):
+        x, aux = apply_layer(cfg, plan, p, x, positions, kv_chunk=kv_chunk)
+        aux_total += aux
+
+    for plan, stacked in zip(model.pattern, params["pattern"]):
+        def body(carry, layer_params, plan=plan):
+            xx, aa = carry
+            xx, aux = apply_layer(cfg, plan, layer_params, xx, positions,
+                                  kv_chunk=kv_chunk)
+            return (xx, aa + aux), ()
+        if cfg.remat:
+            policy = None
+            if cfg.remat_policy == "dots":
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            body = jax.checkpoint(body, policy=policy)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), stacked)
+
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["head"]
+    logits = sharding.constraint(logits, P(sharding.batch_axes(), None, "model"))
+    return logits, aux_total
+
+
+def lm_loss(model: Model, params, batch: Dict[str, jax.Array],
+            *, aux_weight: float = 0.01, kv_chunk: int = 1024) -> jax.Array:
+    logits, aux = forward(model, params, batch, kv_chunk=kv_chunk)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux_weight * aux
+
+
+def encoder_loss(model: Model, params, batch: Dict[str, jax.Array],
+                 *, kv_chunk: int = 1024) -> jax.Array:
+    """Frame-classification CE for the encoder-only (audio) arch."""
+    return lm_loss(model, params, batch, aux_weight=0.0, kv_chunk=kv_chunk)
+
+
+def prefill_step(model: Model, params, batch: Dict[str, jax.Array],
+                 *, kv_chunk: int = 1024) -> jax.Array:
+    """Serving prefill: full forward, last-position logits only (B, 1, V).
+
+    (The dry-run elides the KV-cache write; the backbone compute -- the
+    roofline-relevant part -- is identical.)
+    """
+    cfg = model.cfg
+    x = embed_inputs(model, params, batch)
+    s = x.shape[1]
+    positions = positions_for(model, batch, s)
+
+    for plan, p in zip(model.prefix, params["prefix"]):
+        x, _ = apply_layer(cfg, plan, p, x, positions, kv_chunk=kv_chunk)
+
+    for plan, stacked in zip(model.pattern, params["pattern"]):
+        def body(xx, layer_params, plan=plan):
+            xx, _ = apply_layer(cfg, plan, layer_params, xx, positions,
+                                kv_chunk=kv_chunk)
+            return xx, ()
+        x, _ = jax.lax.scan(body, x, stacked)
+
+    x = rmsnorm(x[:, -1:], params["final_norm"])
+    logits = x @ params["head"]
+    return sharding.constraint(logits, P(sharding.batch_axes(), None, "model"))
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache_entry(cfg: ArchConfig, plan, batch: int, s_max: int):
+    mixer = plan[0]
+    dt = dtype_of(cfg)
+    if mixer == "attn":
+        s_alloc = min(s_max, cfg.sliding_window) if cfg.sliding_window else s_max
+        shape = (batch, s_alloc, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.kv_cache_quant:
+            sshape = shape[:-1]
+            return (jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                    jnp.zeros(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32))
+        return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+    if mixer == "mamba":
+        return mamba_mod.init_mamba_state(cfg, batch, dt)
+    if mixer == "rwkv6":
+        return rwkv_mod.init_rwkv_state(cfg, batch, dt)
+    raise ValueError(mixer)
+
+
+def cache_entry_spec(cfg: ArchConfig, plan, *, batch: int = 0):
+    """Cache sharding for one layer.
+
+    Default: batch over (pod, data), kv heads / head_dim over model.  When
+    the batch does not divide the data axes (the batch-1 long-context
+    shape), the KV *sequence* dim is sharded over data instead -- the
+    sequence-parallel cache layout.
+    """
+    from .layers import kv_head_spec
+    mixer = plan[0]
+    bspec = sharding.batch_axes()
+    data = sharding.axis_size("data") * sharding.axis_size("pod")
+    seq_parallel = batch > 0 and batch % max(data, 1) != 0
+    if seq_parallel:
+        bspec = None
+    if mixer == "attn":
+        hs = kv_head_spec(cfg, sharding.axis_size("model"), for_cache=True)
+        sp = P(bspec, "data" if seq_parallel else None, *hs)
+        if cfg.kv_cache_quant:
+            ssp = P(bspec, "data" if seq_parallel else None, hs[0])
+            return (sp, sp, ssp, ssp)
+        return (sp, sp)
+    if mixer == "mamba":
+        return mamba_mod.MambaState(conv=P(bspec, None, "model"),
+                                    ssm=P(bspec, "model", None))
+    if mixer == "rwkv6":
+        return rwkv_mod.RWKVState(s=P(bspec, "model", None, None),
+                                  x_prev_tm=P(bspec, None),
+                                  x_prev_cm=P(bspec, None))
+    raise ValueError(mixer)
+
+
+def init_cache(model: Model, batch: int, s_max: int):
+    cfg = model.cfg
+    cache = {
+        "prefix": [init_cache_entry(cfg, plan, batch, s_max) for plan in model.prefix],
+        "pattern": [
+            jax.tree.map(lambda x: jnp.broadcast_to(x[None], (model.n_rep,) + x.shape),
+                         init_cache_entry(cfg, plan, batch, s_max))
+            for plan in model.pattern
+        ],
+    }
+    return cache
+
+
+def cache_specs(model: Model, *, batch: int = 0):
+    cfg = model.cfg
+    return {
+        "prefix": [cache_entry_spec(cfg, plan, batch=batch) for plan in model.prefix],
+        "pattern": [
+            jax.tree.map(lambda sp: P(None, *sp),
+                         cache_entry_spec(cfg, plan, batch=batch),
+                         is_leaf=lambda t: isinstance(t, P))
+            for plan in model.pattern
+        ],
+    }
+
+
+def serve_step(model: Model, params, cache, tokens: jax.Array, pos):
+    """One decode step: tokens (B, 1) -> (logits (B, 1, V), new_cache).
+
+    ``pos`` is the current absolute position (scalar int32) == tokens so far.
+    """
+    cfg = model.cfg
+    if cfg.embed_inputs:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        raise ValueError("encoder-only archs have no decode step")
+    x = sharding.constraint(x, P(sharding.batch_axes(), None, None))
+
+    new_prefix = []
+    for plan, p, c in zip(model.prefix, params["prefix"], cache["prefix"]):
+        x, c = decode_layer(cfg, plan, p, x, pos, c)
+        new_prefix.append(c)
+
+    new_pattern = []
+    for plan, stacked, c in zip(model.pattern, params["pattern"], cache["pattern"]):
+        def body(xx, scanned, plan=plan):
+            layer_params, layer_cache = scanned
+            xx, new_c = decode_layer(cfg, plan, layer_params, xx, pos, layer_cache)
+            return xx, new_c
+        x, new_c = jax.lax.scan(body, x, (stacked, c))
+        new_pattern.append(new_c)
+
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["head"]
+    logits = sharding.constraint(logits, P(sharding.batch_axes(), None, "model"))
+    return logits, {"prefix": new_prefix, "pattern": new_pattern}

@@ -1,0 +1,106 @@
+"""Minimal pure-JAX optimizers (pytree-generic): sgd, momentum, adam.
+
+Each optimizer is a pair (init_fn, update_fn):
+    state  = init_fn(params)
+    params, state = update_fn(grads, params, state)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, params, state):
+        new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, params, vel):
+        vel = jax.tree.map(lambda v, g: beta * v + g, vel, grads)
+        new = jax.tree.map(lambda p, v: p - lr * v, params, vel)
+        return new, vel
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(jnp.zeros_like, params)
+        return AdamState(mu=z, nu=jax.tree.map(jnp.zeros_like, params), step=jnp.zeros((), jnp.int32))
+
+    def update(grads, params, state):
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        new = jax.tree.map(
+            lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps), params, mu, nu
+        )
+        return new, AdamState(mu=mu, nu=nu, step=step)
+
+    return Optimizer(init, update)
+
+
+def adafactor_like(lr: float, eps: float = 1e-30) -> Optimizer:
+    """Memory-lean second-moment-factored optimizer for huge-model training.
+
+    Keeps row/col second-moment factors for matrices (>=2D leaves) and full
+    second moments for vectors -- the standard trick to train trillion-scale
+    MoE where Adam's f32 (m, v) would not fit HBM.
+    """
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return (jnp.zeros(p.shape[:-1], jnp.float32), jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return jnp.zeros_like(p, dtype=jnp.float32)
+
+        return jax.tree.map(leaf, params)
+
+    def update(grads, params, state):
+        def leaf(p, g, s):
+            g = g.astype(jnp.float32)
+            if p.ndim >= 2:
+                r, c = s
+                r = 0.999 * r + 0.001 * jnp.mean(g * g, axis=-1)
+                c = 0.999 * c + 0.001 * jnp.mean(g * g, axis=-2)
+                denom = jnp.sqrt(
+                    r[..., :, None] * c[..., None, :] / (jnp.mean(r, axis=-1)[..., None, None] + eps) + eps
+                )
+                upd = g / denom
+                return (p - lr * upd).astype(p.dtype), (r, c)
+            v = 0.999 * s + 0.001 * g * g
+            return (p - lr * g / (jnp.sqrt(v) + 1e-8)).astype(p.dtype), v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state)
+        out = [leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_s = tdef.unflatten([o[1] for o in out])
+        return new_p, new_s
+
+    return Optimizer(init, update)

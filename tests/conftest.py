@@ -1,0 +1,16 @@
+"""Shared pytest fixtures.
+
+The container's CPU JIT accumulates compiled dylibs across the whole
+session and eventually dies with ``LLVM compilation error: Cannot allocate
+memory`` (~200 distinct jits on this 1-core box).  Clearing the jax
+compilation caches between test modules keeps the full suite inside the
+limit without re-jitting within a module.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()

@@ -1,0 +1,57 @@
+"""Roofline analyzer: HLO collective parsing + term arithmetic."""
+import numpy as np
+
+from repro.launch.roofline import (Roofline, _shape_bytes, parse_collectives)
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+HLO = """
+HloModule jit_step
+
+ENTRY %main (p0: bf16[16,4096,7168]) -> bf16[16,4096,7168] {
+  %p0 = bf16[16,4096,7168]{2,1,0} parameter(0)
+  %all-gather.1 = bf16[16,4096,7168]{2,1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%c), to_apply=%add
+  %rs.2 = f32[64,128]{1,0} reduce-scatter(%ar2), dimensions={0}
+  %a2a = (f32[8,16]{1,0}, f32[8,16]{1,0}) all-to-all(%x, %y), dimensions={0}
+  %cp = u32[4]{0} collective-permute(%idx), source_target_pairs={{0,1}}
+  ROOT %out = bf16[16,4096,7168]{2,1,0} copy(%all-gather.1)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,4096,7168]") == 16 * 4096 * 7168 * 2
+    assert _shape_bytes("f32[]") == 4
+    assert _shape_bytes("(f32[8,16], f32[8,16])") == 2 * 8 * 16 * 4
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = parse_collectives(HLO)
+    assert st.count_by_kind == {"all-gather": 1, "all-reduce": 1,
+                                "reduce-scatter": 1, "all-to-all": 1,
+                                "collective-permute": 1}
+    assert st.bytes_by_kind["all-gather"] == 16 * 4096 * 7168 * 2
+    assert st.bytes_by_kind["all-reduce"] == 1024 * 4
+    assert st.bytes_by_kind["all-to-all"] == 2 * 8 * 16 * 4
+    assert st.bytes_by_kind["collective-permute"] == 16
+
+
+def test_parse_ignores_non_collectives():
+    st = parse_collectives("%x = f32[8]{0} add(%a, %b)\n")
+    assert st.total_bytes == 0 and st.total_count == 0
+
+
+def test_roofline_terms():
+    rl = Roofline(flops=PEAK_FLOPS_BF16, hbm_bytes=HBM_BW / 2,
+                  collective_bytes=ICI_BW_PER_LINK / 4, chips=256)
+    assert abs(rl.compute_s - 1.0) < 1e-9
+    assert abs(rl.memory_s - 0.5) < 1e-9
+    assert abs(rl.collective_s - 0.25) < 1e-9
+    assert rl.dominant == "compute"
+    assert abs(rl.step_time_s - 1.0) < 1e-9
+
+
+def test_dominant_switches():
+    rl = Roofline(flops=0.0, hbm_bytes=0.0, collective_bytes=ICI_BW_PER_LINK,
+                  chips=1)
+    assert rl.dominant == "collective"

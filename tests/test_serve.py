@@ -1,0 +1,36 @@
+"""Serving loop: batched generation against the reduced configs."""
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.launch.serve import Request, Server
+
+
+def test_generate_batch_shapes():
+    cfg = C.get("qwen3-1.7b").reduced()
+    server = Server(cfg, max_batch=3, max_seq=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=5), max_new_tokens=4),
+            Request(prompt=rng.integers(0, cfg.vocab, size=8), max_new_tokens=6),
+            Request(prompt=rng.integers(0, cfg.vocab, size=3), max_new_tokens=4)]
+    outs = server.generate(reqs)
+    assert [len(o) for o in outs] == [4, 6, 4]
+    for o in outs:
+        assert o.dtype == np.int32
+        assert (o >= 0).all() and (o < cfg.vocab).all()
+
+
+def test_greedy_deterministic():
+    cfg = C.get("qwen3-1.7b").reduced()
+    server = Server(cfg, max_batch=1, max_seq=32)
+    req = [Request(prompt=np.arange(6, dtype=np.int64) % cfg.vocab,
+                   max_new_tokens=5, temperature=0.0)]
+    o1 = server.generate(req)
+    o2 = server.generate(req)
+    np.testing.assert_array_equal(o1[0], o2[0])
+
+
+def test_encoder_only_rejected():
+    cfg = C.get("hubert-xlarge").reduced()
+    with pytest.raises(AssertionError):
+        Server(cfg)
