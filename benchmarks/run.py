@@ -27,9 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blocks import AdaptiveAllocation, AdaptiveAvgAllocation, FixedAllocation
-from repro.fl.baselines import ALL_BASELINES, BaselineConfig, run_baseline
+from repro.fl import registry
 from repro.fl.data import make_synthetic, partition_dirichlet, partition_iid
-from repro.fl.federator import BiCompFLConfig, CFLConfig, run_bicompfl, run_bicompfl_cfl
+from repro.fl.engine import FLEngine
 from repro.fl.nets import make_cnn, make_mlp
 from repro.fl.tasks import make_cfl_task, make_mask_task
 
@@ -72,23 +72,30 @@ def table_main(fast: bool):
         k, shards, test = _setup(iid=iid)
         task = _mask_task(k, test)
 
+        n = int(shards.x.shape[0])  # n_dl paper default = n_clients * n_ul
         variants = [
-            ("BiCompFL-GR-Fixed", BiCompFLConfig(variant="GR", rounds=rounds,
-                                                 n_is=64, allocation=FixedAllocation(128))),
-            ("BiCompFL-GR-Adaptive", BiCompFLConfig(variant="GR", rounds=rounds,
-                                                    n_is=64, allocation=AdaptiveAllocation(n_is=64))),
-            ("BiCompFL-GR-Adaptive-Avg", BiCompFLConfig(variant="GR", rounds=rounds,
-                                                        n_is=64, allocation=AdaptiveAvgAllocation(n_is=64))),
-            ("BiCompFL-GR-Reconst-Fixed", BiCompFLConfig(variant="GR-Reconst", rounds=rounds,
-                                                         n_is=64, allocation=FixedAllocation(128))),
-            ("BiCompFL-PR-Fixed", BiCompFLConfig(variant="PR", rounds=rounds,
-                                                 n_is=64, allocation=FixedAllocation(128))),
-            ("BiCompFL-PR-Fixed-SplitDL", BiCompFLConfig(variant="PR-SplitDL", rounds=rounds,
-                                                         n_is=64, allocation=FixedAllocation(128))),
+            ("BiCompFL-GR-Fixed",
+             registry.bicompfl_spec("GR", allocation=FixedAllocation(128),
+                                    n_is=64, n_dl=n)),
+            ("BiCompFL-GR-Adaptive",
+             registry.bicompfl_spec("GR", allocation=AdaptiveAllocation(n_is=64),
+                                    n_is=64, n_dl=n)),
+            ("BiCompFL-GR-Adaptive-Avg",
+             registry.bicompfl_spec("GR", allocation=AdaptiveAvgAllocation(n_is=64),
+                                    n_is=64, n_dl=n)),
+            ("BiCompFL-GR-Reconst-Fixed",
+             registry.bicompfl_spec("GR-Reconst", allocation=FixedAllocation(128),
+                                    n_is=64, n_dl=n)),
+            ("BiCompFL-PR-Fixed",
+             registry.bicompfl_spec("PR", allocation=FixedAllocation(128),
+                                    n_is=64, n_dl=n)),
+            ("BiCompFL-PR-Fixed-SplitDL",
+             registry.bicompfl_spec("PR-SplitDL", allocation=FixedAllocation(128),
+                                    n_is=64, n_dl=n)),
         ]
-        for name, cfg in variants:
+        for name, spec in variants:
             t0 = time.time()
-            out = run_bicompfl(task, shards, cfg)
+            out = FLEngine(task, spec).run(shards, rounds=rounds, seed=0)
             print(_fmt_row(name, out) + f"  [{time.time()-t0:.0f}s]", flush=True)
             jax.clear_caches()  # the CPU JIT otherwise exhausts memory
                                 # across variants (LLVM 'Cannot allocate')
@@ -98,11 +105,11 @@ def table_main(fast: bool):
         ctask, theta0 = make_cfl_task(net, jax.random.fold_in(k, 3),
                                       test.x, test.y, local_epochs=5,
                                       batch_size=32, local_lr=3e-3)
-        for scheme in ALL_BASELINES:
+        for scheme in registry.ALL_BASELINES:
             t0 = time.time()
-            out = run_baseline(ctask, theta0, shards,
-                               BaselineConfig(scheme=scheme, rounds=rounds,
-                                              server_lr=1.0))
+            spec = registry.baseline_spec(scheme, n=n, d=int(theta0.shape[0]),
+                                          server_lr=1.0)
+            out = FLEngine(ctask, spec).run(shards, theta0, rounds=rounds, seed=0)
             print(_fmt_row(scheme, out) + f"  [{time.time()-t0:.0f}s]", flush=True)
             jax.clear_caches()
 
@@ -115,13 +122,13 @@ def table_cfl(fast: bool):
     net = make_mlp(in_dim=100, widths=(256,))
     task, theta0 = make_cfl_task(net, jax.random.fold_in(k, 3), test.x, test.y,
                                  local_epochs=5, batch_size=32, local_lr=3e-3)
-    out = run_bicompfl_cfl(task, theta0, shards,
-                           CFLConfig(rounds=rounds, server_lr=1.0))
+    out = FLEngine(task, registry.cfl_spec(server_lr=1.0)).run(
+        shards, theta0, rounds=rounds, seed=0)
     print(_fmt_row("BiCompFL-GR-CFL", out))
+    n, d = int(shards.x.shape[0]), int(theta0.shape[0])
     for scheme in ("doublesqueeze", "memsgd", "fedavg"):
-        out = run_baseline(task, theta0, shards,
-                           BaselineConfig(scheme=scheme, rounds=rounds,
-                                          server_lr=1.0))
+        spec = registry.baseline_spec(scheme, n=n, d=d, server_lr=1.0)
+        out = FLEngine(task, spec).run(shards, theta0, rounds=rounds, seed=0)
         print(_fmt_row(scheme, out))
 
 
@@ -131,9 +138,9 @@ def ablation_ndl(fast: bool):
     k, shards, test = _setup(iid=True)
     task = _mask_task(k, test)
     for n_dl in (2, 5, 10):
-        cfg = BiCompFLConfig(variant="PR", rounds=rounds, n_is=64, n_dl=n_dl,
-                             allocation=FixedAllocation(128))
-        out = run_bicompfl(task, shards, cfg)
+        spec = registry.bicompfl_spec("PR", allocation=FixedAllocation(128),
+                                      n_is=64, n_dl=n_dl)
+        out = FLEngine(task, spec).run(shards, rounds=rounds, seed=0)
         print(_fmt_row(f"PR n_DL={n_dl}", out), flush=True)
         jax.clear_caches()
 
@@ -144,9 +151,9 @@ def ablation_nis(fast: bool):
     k, shards, test = _setup(iid=True)
     task = _mask_task(k, test)
     for n_is in (16, 64, 256):
-        cfg = BiCompFLConfig(variant="GR", rounds=rounds, n_is=n_is,
-                             allocation=FixedAllocation(128))
-        out = run_bicompfl(task, shards, cfg)
+        spec = registry.bicompfl_spec("GR", allocation=FixedAllocation(128),
+                                      n_is=n_is, n_dl=int(shards.x.shape[0]))
+        out = FLEngine(task, spec).run(shards, rounds=rounds, seed=0)
         print(_fmt_row(f"GR n_IS={n_is}", out), flush=True)
         jax.clear_caches()
 
@@ -157,9 +164,9 @@ def ablation_block(fast: bool):
     k, shards, test = _setup(iid=True)
     task = _mask_task(k, test)
     for bs in (64, 128, 256):
-        cfg = BiCompFLConfig(variant="GR", rounds=rounds, n_is=64,
-                             allocation=FixedAllocation(bs))
-        out = run_bicompfl(task, shards, cfg)
+        spec = registry.bicompfl_spec("GR", allocation=FixedAllocation(bs),
+                                      n_is=64, n_dl=int(shards.x.shape[0]))
+        out = FLEngine(task, spec).run(shards, rounds=rounds, seed=0)
         print(_fmt_row(f"GR block={bs}", out), flush=True)
         jax.clear_caches()
 
@@ -170,9 +177,9 @@ def ablation_nclients(fast: bool):
     for n in (4, 8) if fast else (4, 8, 16):
         k, shards, test = _setup(iid=True, n_clients=n)
         task = _mask_task(k, test)
-        cfg = BiCompFLConfig(variant="GR", rounds=rounds, n_is=64,
-                             allocation=FixedAllocation(128))
-        out = run_bicompfl(task, shards, cfg)
+        spec = registry.bicompfl_spec("GR", allocation=FixedAllocation(128),
+                                      n_is=64, n_dl=n)
+        out = FLEngine(task, spec).run(shards, rounds=rounds, seed=0)
         print(_fmt_row(f"GR n={n}", out), flush=True)
         jax.clear_caches()
 

@@ -13,7 +13,8 @@ import jax
 
 from repro.core.blocks import FixedAllocation
 from repro.fl.data import make_synthetic, partition_iid
-from repro.fl.federator import BiCompFLConfig, run_bicompfl
+from repro.fl.engine import FLEngine
+from repro.fl.registry import bicompfl_spec
 from repro.fl.nets import make_mlp
 from repro.fl.tasks import make_mask_task
 
@@ -30,10 +31,13 @@ def main():
                           local_epochs=3, lr=0.1)
     print(f"model dimension d = {task.d} Bernoulli parameters")
 
-    cfg = BiCompFLConfig(variant="GR", rounds=15, n_is=64,
-                         allocation=FixedAllocation(128), eval_every=3)
+    # A scheme is (uplink channel, downlink channel, aggregator): the GR
+    # variant is an MRC uplink over shared candidates + an index-relay
+    # downlink.  Swap either channel to explore new scenarios (DESIGN.md).
+    spec = bicompfl_spec("GR", allocation=FixedAllocation(128), n_is=64,
+                         n_dl=n_clients)
     t0 = time.time()
-    out = run_bicompfl(task, shards, cfg)
+    out = FLEngine(task, spec).run(shards, rounds=15, seed=0, eval_every=3)
     for h in out["history"]:
         print(f"round {h['round']:3d}  acc {h['acc']:.3f}  "
               f"cumulative bpp {h['bpp_so_far']:.4f}")

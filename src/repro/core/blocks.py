@@ -32,6 +32,7 @@ class FixedAllocation:
     block_size: int = 256
 
     name = "Fixed"
+    needs_kl = False  # plan() ignores the KL profile; lets the engine skip it
 
     def blocks_for(self, d: int) -> int:
         return _pad_to(d, self.block_size) // self.block_size
@@ -56,6 +57,7 @@ class AdaptiveAvgAllocation:
     max_block: int = 4096
 
     name = "Adaptive-Avg"
+    needs_kl = True
 
     def plan(self, kl_per_param: Optional[np.ndarray], d: int):
         if kl_per_param is None:
@@ -85,6 +87,7 @@ class AdaptiveAllocation:
     max_block: int = 4096
 
     name = "Adaptive"
+    needs_kl = True
 
     def plan(self, kl_per_param: Optional[np.ndarray], d: int):
         if kl_per_param is None:

@@ -1,2 +1,3 @@
-"""Federated-learning runtime: tasks, data, federator loops, baselines."""
-from . import baselines, data, federator, nets, tasks  # noqa: F401
+"""Federated-learning runtime: channels, engine, tasks, data, wrappers."""
+from . import (baselines, channels, data, engine, federator, nets,  # noqa: F401
+               registry, tasks)

@@ -19,20 +19,21 @@ Schemes (with the simplifications we make, cf. DESIGN.md):
 * m3             : Gruntkowska et al. 2024 -- TopK(d/n) + EF uplink; downlink
                    sends each client a *disjoint* 1/n model slice (dense);
                    clients hold diverging model estimates.
+
+``run_baseline`` is a thin wrapper: each scheme is a
+(uplink, downlink, aggregator) factory in :mod:`repro.fl.registry`, executed
+by the shared :class:`~repro.fl.engine.FLEngine` round loop.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Any, Dict, List
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.bitmeter import BitMeter
-from repro.core.quantizers import (FLOAT_BITS, sign_compress, topk_bits,
-                                   topk_compress)
 from .data import Dataset
+from .engine import FLEngine
+from .registry import ALL_BASELINES, baseline_spec  # noqa: F401  (re-export)
 
 
 @dataclass
@@ -45,99 +46,11 @@ class BaselineConfig:
     reset_period: int = 50   # CSER / LIEC periodic sync
 
 
-def run_baseline(task, theta0: jax.Array, shards: Dataset, cfg: BaselineConfig) -> Dict[str, Any]:
+def run_baseline(task, theta0: jax.Array, shards: Dataset,
+                 cfg: BaselineConfig) -> Dict[str, Any]:
     n = int(shards.x.shape[0])
     d = int(theta0.shape[0])
-    base = jax.random.PRNGKey(cfg.seed)
-    scheme = cfg.scheme.lower()
-    meter = BitMeter(n_clients=n, d=d,
-                     broadcast_downlink_shareable=(scheme != "m3"))
-
-    theta = theta0                                   # server model
-    theta_hat = jnp.tile(theta0[None], (n, 1))       # client estimates
-    e_up = jnp.zeros((n, d))                         # client EF memories
-    e_down = jnp.zeros((d,))                         # server EF memory
-    k_m3 = max(d // n, 1)
-    history: List[Dict[str, float]] = []
-
-    def sign2(v):
-        """Two-pass sign compression (Neolithic's repeated compression)."""
-        c1 = sign_compress(v)
-        c2 = sign_compress(v - c1)
-        return c1 + c2
-
-    for t in range(cfg.rounds):
-        kt = jax.random.fold_in(base, t)
-        train_keys = jax.random.split(jax.random.fold_in(kt, 1), n)
-        deltas = jax.vmap(task.local_train)(theta_hat, shards.x, shards.y, train_keys)
-
-        ul_bits = dl_bits = 0.0
-        if scheme == "fedavg":
-            agg = jnp.mean(deltas, axis=0)
-            theta = theta - cfg.server_lr * agg
-            theta_hat = jnp.tile(theta[None], (n, 1))
-            ul_bits = n * d * FLOAT_BITS
-            dl_bits = n * d * FLOAT_BITS
-        elif scheme in ("memsgd", "cser"):
-            c = jax.vmap(sign_compress)(deltas + e_up)
-            e_up = deltas + e_up - c
-            theta = theta - cfg.server_lr * jnp.mean(c, axis=0)
-            theta_hat = jnp.tile(theta[None], (n, 1))
-            ul_bits = n * (d + FLOAT_BITS)
-            dl_bits = n * d * FLOAT_BITS
-            if scheme == "cser" and (t + 1) % cfg.reset_period == 0:
-                # error reset: flush residuals (dense sync, both directions)
-                theta = theta - cfg.server_lr * jnp.mean(e_up, axis=0)
-                e_up = jnp.zeros_like(e_up)
-                theta_hat = jnp.tile(theta[None], (n, 1))
-                ul_bits += n * d * FLOAT_BITS
-                dl_bits += n * d * FLOAT_BITS
-        elif scheme in ("doublesqueeze", "neolithic", "liec"):
-            comp = sign2 if scheme == "neolithic" else sign_compress
-            bits_per = 2.0 if scheme == "neolithic" else 1.0
-            c = jax.vmap(comp)(deltas + e_up)
-            e_up = deltas + e_up - c
-            agg = jnp.mean(c, axis=0) + e_down
-            c_s = comp(agg)
-            e_down = agg - c_s
-            theta = theta - cfg.server_lr * c_s
-            theta_hat = theta_hat - cfg.server_lr * c_s[None, :]
-            ul_bits = n * (bits_per * d + FLOAT_BITS * (2 if scheme == "neolithic" else 1))
-            dl_bits = n * (bits_per * d + FLOAT_BITS * (2 if scheme == "neolithic" else 1))
-            if scheme == "liec" and (t + 1) % cfg.reset_period == 0:
-                # periodic exact averaging (immediate-compensation flush)
-                theta = theta - cfg.server_lr * (jnp.mean(e_up, axis=0) + e_down)
-                e_up = jnp.zeros_like(e_up)
-                e_down = jnp.zeros_like(e_down)
-                theta_hat = jnp.tile(theta[None], (n, 1))
-                ul_bits += n * d * FLOAT_BITS
-                dl_bits += n * d * FLOAT_BITS
-        elif scheme == "m3":
-            c = jax.vmap(lambda v: topk_compress(v, k_m3))(deltas + e_up)
-            e_up = deltas + e_up - c
-            theta = theta - cfg.server_lr * jnp.mean(c, axis=0)
-            # downlink: disjoint dense slices, one per client
-            new_hat = []
-            for i in range(n):
-                lo = i * k_m3
-                hi = d if i == n - 1 else min((i + 1) * k_m3, d)
-                sl = theta_hat[i].at[lo:hi].set(theta[lo:hi])
-                new_hat.append(sl)
-            theta_hat = jnp.stack(new_hat)
-            ul_bits = n * topk_bits(d, k_m3)
-            dl_bits = n * (d / n) * FLOAT_BITS
-        else:
-            raise ValueError(scheme)
-
-        meter.add_round(ul_bits, dl_bits)
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            acc = task.evaluate(theta)
-            history.append({"round": t + 1, "acc": float(acc),
-                            "cum_bits": meter.total_bits})
-
-    return {"history": history, "meter": meter.summary(), "theta": theta,
-            "final_acc": history[-1]["acc"] if history else float("nan"),
-            "max_acc": max(h["acc"] for h in history) if history else float("nan")}
-
-
-ALL_BASELINES = ("fedavg", "memsgd", "doublesqueeze", "neolithic", "cser", "liec", "m3")
+    spec = baseline_spec(cfg.scheme, n=n, d=d, server_lr=cfg.server_lr,
+                         reset_period=cfg.reset_period)
+    return FLEngine(task, spec).run(shards, theta0, rounds=cfg.rounds,
+                                    seed=cfg.seed, eval_every=cfg.eval_every)

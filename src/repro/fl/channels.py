@@ -1,0 +1,574 @@
+"""Composable communication channels for the FL engine (cf. DESIGN.md).
+
+BICompFL's central observation is that uplink and downlink are *both*
+compression channels whose costs interact.  This module makes each direction
+a first-class object: a :class:`Channel` encodes what one party sends, what
+the other party reconstructs, and **how many bits crossed the wire** -- the
+bit accounting lives in the channel, not in the training loop.
+
+Uplink channels implement::
+
+    transmit(ctx, payload, priors) -> (server_side_estimates, bits)
+
+where ``payload`` is the per-active-client message source -- Bernoulli
+posteriors ``q`` for the probabilistic-mask path, weight deltas for
+conventional FL -- and ``priors`` are the clients' current global-model
+estimates (the MRC prior; ignored by the non-stochastic compressors).
+
+Downlink channels implement::
+
+    distribute(ctx, update, theta, theta_hat) -> DownlinkResult
+
+receiving the aggregator's proposed :class:`ServerUpdate` and returning the
+*final* server model, the new per-client estimates and the downlink bits.
+The downlink owns the final model update because some schemes (sign-EF a la
+DoubleSqueeze) have the server itself step with the *compressed* aggregate.
+
+Channels may hold state (error-feedback memories); instantiate a fresh
+channel per run.  ``flush()`` supports the periodic error-reset of CSER /
+LIEC: it returns the residual the server should apply plus the dense bits
+the synchronisation costs.
+
+Key-derivation tags reproduce the seed loops exactly, so the engine is
+bit-for-bit compatible with the original ``run_bicompfl`` (see
+tests/test_engine_parity.py).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mrc
+from repro.core.bernoulli import clip01
+from repro.core.quantizers import (FLOAT_BITS, sign_compress, topk_bits,
+                                   topk_compress)
+
+# ---------------------------------------------------------------------------
+# Key-derivation tags (shared-randomness schedule, identical to the seed).
+# ---------------------------------------------------------------------------
+
+TAG_TRAIN = 1          # per-round local-training keys
+TAG_UL_SELECT = 2      # uplink Gumbel selection stream
+TAG_DL_SHARED = 3      # downlink candidate stream
+TAG_DL_SELECT_COMMON = 4   # downlink selection, common (GR-Reconst)
+TAG_DL_SELECT_PRIVATE = 5  # downlink selection, per-client (PR variants)
+
+
+def _vfold(key: jax.Array, ids: jax.Array) -> jax.Array:
+    """fold_in(key, i) for every client id i -> stacked keys."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(ids)
+
+
+def _vclient_keys(kt: jax.Array, ids: jax.Array) -> jax.Array:
+    """Per-client private shared randomness, vmapped over ids."""
+    return jax.vmap(lambda i: mrc.client_key(kt, i))(ids)
+
+
+# ---------------------------------------------------------------------------
+# Block helpers.  Pad value 0.5 for BOTH q and p => padded entries have zero
+# KL and never influence the selected index.  Batched over leading dims.
+# ---------------------------------------------------------------------------
+
+
+def to_blocks(v: jax.Array, size: int) -> jax.Array:
+    d = v.shape[-1]
+    b = -(-d // size)
+    pad = b * size - d
+    if pad:
+        v = jnp.concatenate([v, jnp.full(v.shape[:-1] + (pad,), 0.5, v.dtype)], axis=-1)
+    return v.reshape(v.shape[:-1] + (b, size))
+
+
+def from_blocks(m: jax.Array, d: int) -> jax.Array:
+    return m.reshape(m.shape[:-2] + (-1,))[..., :d]
+
+
+# ---------------------------------------------------------------------------
+# Round context / server update.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BlockPlan:
+    """One round's block-allocation decision (host-side control plane)."""
+
+    size: Optional[int]            # fixed block size (None for segment codec)
+    n_blocks: int
+    seg_ids: Optional[np.ndarray]  # per-parameter segment ids (adaptive only)
+    overhead_bits: float           # side information per client
+
+    @property
+    def adaptive(self) -> bool:
+        return self.seg_ids is not None
+
+
+@dataclass(frozen=True)
+class RoundContext:
+    """Everything a channel may need about the current global round."""
+
+    t: int
+    key: jax.Array        # kt = mrc.round_key(base, t) -- shared randomness
+    n_clients: int
+    d: int
+    active: np.ndarray    # sorted global ids of the participating cohort
+    plan: Optional[BlockPlan] = None
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def active_ids(self) -> jax.Array:
+        return jnp.asarray(self.active, dtype=jnp.int32)
+
+
+@dataclass(frozen=True)
+class ServerUpdate:
+    """Aggregator output: the proposed next server model.
+
+    ``delta`` carries the aggregate update direction for delta-space schemes
+    (``theta = theta_prev - lr * delta``); it is None for model-space schemes
+    (BiCompFL) whose aggregate *is* the new model.
+    """
+
+    theta: jax.Array
+    delta: Optional[jax.Array] = None
+    lr: float = 1.0
+
+
+class DownlinkResult(NamedTuple):
+    theta: jax.Array      # final server model after the downlink
+    theta_hat: jax.Array  # (n_clients, d) client estimates
+    bits: float
+
+
+@runtime_checkable
+class UplinkChannel(Protocol):
+    def transmit(self, ctx: RoundContext, payload: jax.Array,
+                 priors: jax.Array) -> Tuple[jax.Array, float]: ...
+
+
+@runtime_checkable
+class DownlinkChannel(Protocol):
+    broadcast_shareable: bool
+
+    def distribute(self, ctx: RoundContext, update: ServerUpdate,
+                   theta: jax.Array, theta_hat: jax.Array) -> DownlinkResult: ...
+
+
+def _no_flush(n: int, d: int):
+    return 0.0, 0.0
+
+
+# ---------------------------------------------------------------------------
+# MRC channels (the paper's C_mrc, fixed-size blocks / adaptive segments).
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MRCFixedChannel:
+    """Uplink MRC over fixed-size blocks, vmapped across the cohort.
+
+    ``shared=True`` (GR) lets every client draw candidates from the *common*
+    round key; ``shared=False`` (PR) vmaps over per-client private keys.
+    """
+
+    n_is: int = 256
+    n_samples: int = 1
+    shared: bool = True
+    chunk: int = 16
+    logw_fn: Any = None
+
+    def transmit(self, ctx, payload, priors):
+        plan = ctx.plan
+        kt = ctx.key
+        qb = to_blocks(clip01(payload), plan.size)   # (n_act, B, S)
+        pb = to_blocks(clip01(priors), plan.size)
+        sels = _vfold(jax.random.fold_in(kt, TAG_UL_SELECT), ctx.active_ids)
+
+        def one(skey, sel, q_i, p_i):
+            _, q_hat_b = mrc.transmit_fixed(
+                skey, sel, q_i, p_i, n_is=self.n_is, n_samples=self.n_samples,
+                chunk=self.chunk, logw_fn=self.logw_fn)
+            return q_hat_b
+
+        if self.shared:
+            q_hat_b = jax.vmap(lambda sel, q, p: one(kt, sel, q, p))(sels, qb, pb)
+        else:
+            skeys = _vclient_keys(kt, ctx.active_ids)
+            q_hat_b = jax.vmap(one)(skeys, sels, qb, pb)
+        bits = ctx.n_active * self.n_samples * plan.n_blocks * math.log2(self.n_is)
+        return from_blocks(q_hat_b, ctx.d), bits
+
+    flush = staticmethod(_no_flush)
+
+
+@dataclass
+class MRCAdaptiveChannel:
+    """Uplink MRC over variable-size segments (Isik et al. 2024 allocation)."""
+
+    n_is: int = 256
+    n_samples: int = 1
+    shared: bool = True
+
+    def transmit(self, ctx, payload, priors):
+        plan = ctx.plan
+        kt = ctx.key
+        seg = jnp.asarray(plan.seg_ids)
+        sels = _vfold(jax.random.fold_in(kt, TAG_UL_SELECT), ctx.active_ids)
+
+        def one(skey, sel, q_i, p_i):
+            _, q_hat = mrc.transmit_segments(
+                skey, sel, q_i, clip01(p_i), seg, n_is=self.n_is,
+                n_seg=plan.n_blocks, n_samples=self.n_samples)
+            return q_hat
+
+        q = clip01(payload)
+        if self.shared:
+            q_hat = jax.vmap(lambda sel, q_i, p: one(kt, sel, q_i, p))(sels, q, priors)
+        else:
+            skeys = _vclient_keys(kt, ctx.active_ids)
+            q_hat = jax.vmap(one)(skeys, sels, q, priors)
+        bits = ctx.n_active * self.n_samples * plan.n_blocks * math.log2(self.n_is)
+        return q_hat, bits
+
+    flush = staticmethod(_no_flush)
+
+
+@dataclass
+class QuantizedMRCUplink:
+    """Conventional-FL uplink: stochastic sign -> MRC vs the Ber(1/2) prior.
+
+    Each client maps its delta to a Bernoulli posterior q = sigmoid(delta/K)
+    with per-client temperature K = mean|delta| (32-bit side information),
+    conveys ``n_samples`` MRC samples against the uninformative prior, and
+    the server reconstructs the direction (2*q_hat - 1) * K.
+    """
+
+    n_is: int = 256
+    n_samples: int = 1
+    chunk: int = 16
+    logw_fn: Any = None
+    side_info_bits: float = FLOAT_BITS
+
+    def transmit(self, ctx, payload, priors):
+        plan = ctx.plan
+        kt = ctx.key
+        d = ctx.d
+        p_blocks = jnp.full((plan.n_blocks, plan.size), 0.5, jnp.float32)
+        sels = _vfold(jax.random.fold_in(kt, TAG_UL_SELECT), ctx.active_ids)
+
+        def one(sel, delta):
+            K = jnp.mean(jnp.abs(delta)) + 1e-12
+            q_i = clip01(jax.nn.sigmoid(delta / K))
+            _, q_hat_b = mrc.transmit_fixed(
+                kt, sel, to_blocks(q_i, plan.size), p_blocks, n_is=self.n_is,
+                n_samples=self.n_samples, chunk=self.chunk, logw_fn=self.logw_fn)
+            return (2.0 * from_blocks(q_hat_b, d) - 1.0) * K
+
+        g_hat = jax.vmap(one)(sels, payload)
+        bits = ctx.n_active * (self.n_samples * plan.n_blocks * math.log2(self.n_is)
+                               + self.side_info_bits)
+        return g_hat, bits
+
+    flush = staticmethod(_no_flush)
+
+
+# ---------------------------------------------------------------------------
+# BiCompFL downlinks.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class IndexRelayDownlink:
+    """GR downlink: relay the other clients' uplink indices.
+
+    With common candidates every client reconstructs the identical global
+    model, so no recomputation is needed -- only the bits are booked:
+    each client receives the (n-1) other clients' index streams (plus
+    optional per-client side information, e.g. the CFL temperatures).
+    """
+
+    n_is: int = 256
+    n_samples: int = 1           # relayed samples per client (n_UL)
+    side_info_bits: float = 0.0
+    broadcast_shareable: bool = True
+
+    def distribute(self, ctx, update, theta, theta_hat):
+        n = ctx.n_clients
+        th = update.theta
+        bits = n * (n - 1) * (self.n_samples * ctx.plan.n_blocks
+                              * math.log2(self.n_is) + self.side_info_bits)
+        return DownlinkResult(th, jnp.tile(th[None], (n, 1)), bits)
+
+    flush = staticmethod(_no_flush)
+
+
+@dataclass
+class MRCBroadcastDownlink:
+    """GR-Reconst downlink: one MRC re-transmission against the common prior;
+    all clients share candidates and end with the same (noisy) estimate."""
+
+    n_is: int = 256
+    n_samples: int = 1           # n_DL
+    chunk: int = 16
+    logw_fn: Any = None
+    broadcast_shareable: bool = True
+
+    def distribute(self, ctx, update, theta, theta_hat):
+        kt, plan, d = ctx.key, ctx.plan, ctx.d
+        skey = jax.random.fold_in(kt, TAG_DL_SHARED)
+        sel = jax.random.fold_in(kt, TAG_DL_SELECT_COMMON)
+        p_common = clip01(theta_hat[0])
+        tgt = update.theta
+        if plan.adaptive:
+            _, est = mrc.transmit_segments(
+                skey, sel, tgt, p_common, jnp.asarray(plan.seg_ids),
+                n_is=self.n_is, n_seg=plan.n_blocks, n_samples=self.n_samples)
+        else:
+            _, est_b = mrc.transmit_fixed(
+                skey, sel, to_blocks(tgt, plan.size), to_blocks(p_common, plan.size),
+                n_is=self.n_is, n_samples=self.n_samples, chunk=self.chunk,
+                logw_fn=self.logw_fn)
+            est = from_blocks(est_b, d)
+        bits = ctx.n_clients * self.n_samples * plan.n_blocks * math.log2(self.n_is)
+        return DownlinkResult(tgt, jnp.tile(clip01(est)[None], (ctx.n_clients, 1)), bits)
+
+    flush = staticmethod(_no_flush)
+
+
+@dataclass
+class MRCPrivateDownlink:
+    """PR downlink: per-client MRC against each client's own prior, vmapped
+    over per-client private keys.  Under partial participation only the
+    active cohort receives the downlink; stragglers keep stale estimates."""
+
+    n_is: int = 256
+    n_samples: int = 1           # n_DL
+    chunk: int = 16
+    logw_fn: Any = None
+    broadcast_shareable: bool = False
+
+    def distribute(self, ctx, update, theta, theta_hat):
+        kt, plan, d = ctx.key, ctx.plan, ctx.d
+        ids = ctx.active_ids
+        skeys = jax.vmap(lambda k: jax.random.fold_in(k, TAG_DL_SHARED))(
+            _vclient_keys(kt, ids))
+        sels = _vfold(jax.random.fold_in(kt, TAG_DL_SELECT_PRIVATE), ids)
+        priors = clip01(theta_hat[ids])
+        tgt = update.theta
+        if plan.adaptive:
+            seg = jnp.asarray(plan.seg_ids)
+
+            def one(skey, sel, p_i):
+                _, est = mrc.transmit_segments(
+                    skey, sel, tgt, p_i, seg, n_is=self.n_is,
+                    n_seg=plan.n_blocks, n_samples=self.n_samples)
+                return est
+        else:
+            tb = to_blocks(tgt, plan.size)
+
+            def one(skey, sel, p_i):
+                _, est_b = mrc.transmit_fixed(
+                    skey, sel, tb, to_blocks(p_i, plan.size), n_is=self.n_is,
+                    n_samples=self.n_samples, chunk=self.chunk, logw_fn=self.logw_fn)
+                return from_blocks(est_b, d)
+
+        est = jax.vmap(one)(skeys, sels, priors)
+        theta_hat = theta_hat.at[ids].set(clip01(est))
+        bits = ctx.n_active * self.n_samples * plan.n_blocks * math.log2(self.n_is)
+        return DownlinkResult(tgt, theta_hat, bits)
+
+    flush = staticmethod(_no_flush)
+
+
+@dataclass
+class SplitBlockDownlink:
+    """PR-SplitDL: each client receives MRC only for a disjoint 1/n of the
+    blocks (downlink cost / n); the rest of its estimate stays as-is.
+
+    Clients own interleaved block subsets arange(i, B, n).  The per-client
+    subsets are ragged when B % n != 0, so they are padded to the common
+    maximum with one sentinel block whose result is discarded -- this keeps
+    the whole downlink a single vmapped transmission.  Fixed blocks only.
+    """
+
+    n_is: int = 256
+    n_samples: int = 1           # n_DL
+    chunk: int = 16
+    logw_fn: Any = None
+    broadcast_shareable: bool = False
+
+    def distribute(self, ctx, update, theta, theta_hat):
+        kt, plan, d = ctx.key, ctx.plan, ctx.d
+        if plan.adaptive:
+            raise NotImplementedError("SplitDL is defined on fixed blocks")
+        n, size, n_blocks = ctx.n_clients, plan.size, plan.n_blocks
+        max_len = -(-n_blocks // n)
+        # Padded ownership table; sentinel index n_blocks targets a dummy row.
+        own_pad = np.full((n, max_len), n_blocks, np.int32)
+        for i in range(n):
+            own = np.arange(i, n_blocks, n, dtype=np.int32)
+            own_pad[i, :len(own)] = own
+        own_pad = jnp.asarray(own_pad)
+
+        tb = to_blocks(update.theta, size)                       # (B, S)
+        dummy = jnp.full((1, size), 0.5, tb.dtype)
+        tb_ext = jnp.concatenate([tb, dummy])
+        hb_all = to_blocks(clip01(theta_hat), size)              # (n, B, S)
+        ids = jnp.arange(n, dtype=jnp.int32)
+        skeys = jax.vmap(lambda k: jax.random.fold_in(k, TAG_DL_SHARED))(
+            _vclient_keys(kt, ids))
+        sels = _vfold(jax.random.fold_in(kt, TAG_DL_SELECT_PRIVATE), ids)
+        chunk = min(self.chunk, max_len)
+
+        def one(skey, sel, hb_i, own_i):
+            hb_ext = jnp.concatenate([hb_i, dummy])
+            _, est_b = mrc.transmit_fixed(
+                skey, sel, tb_ext[own_i], hb_ext[own_i], n_is=self.n_is,
+                n_samples=self.n_samples, chunk=chunk, logw_fn=self.logw_fn)
+            hb_ext = hb_ext.at[own_i].set(clip01(est_b))
+            return from_blocks(hb_ext[:n_blocks], d)
+
+        theta_hat = jax.vmap(one)(skeys, sels, hb_all, own_pad)
+        bits = n * self.n_samples * max_len * math.log2(self.n_is)
+        return DownlinkResult(update.theta, theta_hat, bits)
+
+    flush = staticmethod(_no_flush)
+
+
+# ---------------------------------------------------------------------------
+# Non-stochastic baseline channels.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DenseChannel:
+    """Lossless 32-bit transmission; usable on either direction."""
+
+    bits_per_value: float = FLOAT_BITS
+    broadcast_shareable: bool = True
+
+    def transmit(self, ctx, payload, priors):
+        return payload, ctx.n_active * ctx.d * self.bits_per_value
+
+    def distribute(self, ctx, update, theta, theta_hat):
+        th = update.theta
+        return DownlinkResult(th, jnp.tile(th[None], (ctx.n_clients, 1)),
+                              ctx.n_clients * ctx.d * self.bits_per_value)
+
+    def flush(self, n, d):
+        # Stateless: a periodic sync through a dense channel only costs bits.
+        return 0.0, n * d * self.bits_per_value
+
+
+@dataclass
+class SignEFChannel:
+    """Sign compression with error feedback; ``passes>1`` repeats compression
+    on the residual (Neolithic's R-pass scheme, ~``passes`` bits/param).
+
+    As an uplink it keeps per-client EF memory (n, d); as a downlink it
+    keeps the server-side memory (d,) and steps server *and* clients with
+    the compressed aggregate (DoubleSqueeze).
+    """
+
+    passes: int = 1
+    broadcast_shareable: bool = True
+    _e: Optional[jax.Array] = field(default=None, repr=False)
+
+    def _compress(self, v):
+        c = sign_compress(v)
+        for _ in range(self.passes - 1):
+            c = c + sign_compress(v - c)
+        return c
+
+    def transmit(self, ctx, payload, priors):
+        if ctx.n_active != ctx.n_clients:
+            raise ValueError("error-feedback uplinks require full participation")
+        if self._e is None:
+            self._e = jnp.zeros_like(payload)
+        acc = payload + self._e
+        c = jax.vmap(self._compress)(acc)
+        self._e = acc - c
+        bits = ctx.n_clients * self.passes * (ctx.d + FLOAT_BITS)
+        return c, bits
+
+    def distribute(self, ctx, update, theta, theta_hat):
+        g = update.delta if update.delta is not None \
+            else (theta - update.theta) / update.lr
+        if self._e is None:
+            self._e = jnp.zeros_like(g)
+        agg = g + self._e
+        c_s = self._compress(agg)
+        self._e = agg - c_s
+        bits = ctx.n_clients * self.passes * (ctx.d + FLOAT_BITS)
+        return DownlinkResult(theta - update.lr * c_s,
+                              theta_hat - update.lr * c_s[None, :], bits)
+
+    def flush(self, n, d):
+        if self._e is None:
+            return 0.0, n * d * FLOAT_BITS
+        r = jnp.mean(self._e, axis=0) if self._e.ndim == 2 else self._e
+        self._e = jnp.zeros_like(self._e)
+        return r, n * d * FLOAT_BITS
+
+    def reset(self):
+        self._e = None
+
+
+@dataclass
+class TopKEFChannel:
+    """Top-k sparsification with error feedback (M3 uplink, k = d/n)."""
+
+    k: int = 1
+    _e: Optional[jax.Array] = field(default=None, repr=False)
+
+    def transmit(self, ctx, payload, priors):
+        if ctx.n_active != ctx.n_clients:
+            raise ValueError("error-feedback uplinks require full participation")
+        if self._e is None:
+            self._e = jnp.zeros_like(payload)
+        acc = payload + self._e
+        c = jax.vmap(lambda v: topk_compress(v, self.k))(acc)
+        self._e = acc - c
+        return c, ctx.n_clients * topk_bits(ctx.d, self.k)
+
+    def flush(self, n, d):
+        if self._e is None:
+            return 0.0, n * d * FLOAT_BITS
+        r = jnp.mean(self._e, axis=0)
+        self._e = jnp.zeros_like(self._e)
+        return r, n * d * FLOAT_BITS
+
+    def reset(self):
+        self._e = None
+
+
+@dataclass
+class SliceDownlink:
+    """M3 downlink: each client receives a disjoint dense 1/n model slice;
+    client estimates diverge (no broadcast saving possible).
+
+    ``k`` (slice width) defaults to d/n at runtime; pass it explicitly to
+    keep it consistent with a paired Top-k uplink budget."""
+
+    k: Optional[int] = None
+    broadcast_shareable: bool = False
+
+    def distribute(self, ctx, update, theta, theta_hat):
+        n, d = ctx.n_clients, ctx.d
+        th = update.theta
+        k = self.k if self.k is not None else max(d // n, 1)
+        new_hat = []
+        for i in range(n):
+            lo = i * k
+            hi = d if i == n - 1 else min((i + 1) * k, d)
+            new_hat.append(theta_hat[i].at[lo:hi].set(th[lo:hi]))
+        return DownlinkResult(th, jnp.stack(new_hat), n * (d / n) * FLOAT_BITS)
+
+    flush = staticmethod(_no_flush)

@@ -1,0 +1,173 @@
+"""The one FL round loop: local-train -> uplink -> aggregate -> downlink.
+
+Every training loop in the repo -- the four BiCompFL variants, BiCompFL-CFL,
+and all seven non-stochastic baselines -- is an :class:`EngineSpec`
+(uplink channel, downlink channel, aggregator, plus block allocation and
+participation policy) executed by :class:`FLEngine`.  The engine owns the
+things every scheme shares and that used to be copy-pasted per loop:
+
+* shared-randomness key schedule (round key, per-client training keys),
+* partial participation (cohort sampling; inactive clients are *not*
+  trained -- the seed loops wastefully vmapped ``local_train`` over the full
+  cohort even when ``participation < 1``),
+* the host-side block-allocation control plane,
+* periodic error-feedback synchronisation (CSER / LIEC style ``flush``),
+* BitMeter accounting and evaluation history.
+
+The engine reproduces the seed loops bit-for-bit at full participation
+(tests/test_engine_parity.py); see DESIGN.md for the API contract.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mrc
+from repro.core.bernoulli import bern_kl, clip01
+from repro.core.bitmeter import BitMeter
+from .channels import BlockPlan, RoundContext, ServerUpdate, TAG_TRAIN
+from .data import Dataset
+
+
+# ---------------------------------------------------------------------------
+# Aggregators: uplink output -> proposed server update.
+# ---------------------------------------------------------------------------
+
+
+class MeanModelAggregator:
+    """BiCompFL: the mean of the conveyed posterior samples *is* the model."""
+
+    def __call__(self, ctx, theta, up_out) -> ServerUpdate:
+        return ServerUpdate(theta=jnp.mean(up_out, axis=0))
+
+
+@dataclass
+class MeanDeltaAggregator:
+    """Conventional FL: average the (compressed) deltas, step the server."""
+
+    server_lr: float = 1.0
+
+    def __call__(self, ctx, theta, up_out) -> ServerUpdate:
+        g = jnp.mean(up_out, axis=0)
+        return ServerUpdate(theta=theta - self.server_lr * g, delta=g,
+                            lr=self.server_lr)
+
+
+# ---------------------------------------------------------------------------
+# Engine.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EngineSpec:
+    """A complete FL scheme: who compresses what, in which direction."""
+
+    uplink: Any
+    downlink: Any
+    aggregator: Any
+    allocation: Any = None       # block-allocation strategy (MRC schemes)
+    participation: float = 1.0   # fraction of clients active per round
+    sync_period: int = 0         # 0 = never; else flush EF memories every k
+    name: str = ""
+
+
+class FLEngine:
+    """Runs an :class:`EngineSpec` against a task and sharded dataset."""
+
+    def __init__(self, task, spec: EngineSpec):
+        self.task = task
+        self.spec = spec
+
+    def run(self, shards: Dataset, theta0: Optional[jax.Array] = None, *,
+            rounds: int, seed: int = 0, eval_every: int = 1) -> Dict[str, Any]:
+        task, spec = self.task, self.spec
+        # Stateful channels (error-feedback memories) must start fresh: a
+        # spec may be run more than once.
+        for chan in (spec.uplink, spec.downlink):
+            reset = getattr(chan, "reset", None)
+            if reset is not None:
+                reset()
+        n = int(shards.x.shape[0])
+        theta = task.init_theta() if theta0 is None else theta0
+        d = int(theta.shape[0])
+        theta_hat = jnp.tile(theta[None], (n, 1))
+        meter = BitMeter(
+            n_clients=n, d=d,
+            broadcast_downlink_shareable=getattr(
+                spec.downlink, "broadcast_shareable", True))
+        base = jax.random.PRNGKey(seed)
+        n_active = max(1, int(round(spec.participation * n)))
+        rng = np.random.default_rng(seed + 17)
+        history: List[Dict[str, float]] = []
+
+        for t in range(rounds):
+            kt = mrc.round_key(base, t)
+            active = np.sort(rng.choice(n, size=n_active, replace=False)) \
+                if n_active < n else np.arange(n)
+
+            # ---- local training: only the active cohort ------------------
+            train_keys = jax.random.split(jax.random.fold_in(kt, TAG_TRAIN), n)
+            if n_active < n:
+                priors = theta_hat[active]
+                xs, ys, keys = (shards.x[active], shards.y[active],
+                                train_keys[active])
+            else:  # full participation: no device-side gather/copy needed
+                priors, xs, ys, keys = theta_hat, shards.x, shards.y, train_keys
+            payload = jax.vmap(task.local_train)(priors, xs, ys, keys)
+
+            # ---- block allocation (host-side control plane) --------------
+            plan = None
+            if spec.allocation is not None:
+                kl = None
+                if getattr(spec.allocation, "needs_kl", True):
+                    kl = np.asarray(jnp.mean(jax.vmap(bern_kl)(
+                        payload, clip01(priors)), axis=0))
+                size, n_blocks, seg_ids, overhead = spec.allocation.plan(kl, d)
+                plan = BlockPlan(size=size, n_blocks=n_blocks,
+                                 seg_ids=seg_ids, overhead_bits=overhead)
+
+            ctx = RoundContext(t=t, key=kt, n_clients=n, d=d, active=active,
+                               plan=plan)
+
+            # ---- uplink -> aggregate -> downlink -------------------------
+            up_out, ul_bits = spec.uplink.transmit(ctx, payload, priors)
+            update = spec.aggregator(ctx, theta, up_out)
+            theta, theta_hat, dl_bits = spec.downlink.distribute(
+                ctx, update, theta, theta_hat)
+
+            # ---- periodic EF synchronisation (CSER / LIEC) ---------------
+            if spec.sync_period and (t + 1) % spec.sync_period == 0:
+                r_up, b_up = spec.uplink.flush(n, d)
+                r_dn, b_dn = spec.downlink.flush(n, d)
+                # flush at the aggregator's step size (update.lr), so a
+                # hand-built spec cannot desync the reset from the rounds
+                theta = theta - update.lr * (r_up + r_dn)
+                theta_hat = jnp.tile(theta[None], (n, 1))
+                ul_bits += b_up
+                dl_bits += b_dn
+
+            overhead_bits = plan.overhead_bits * n if plan is not None else 0.0
+            meter.add_round(ul_bits, dl_bits, overhead_bits=overhead_bits)
+
+            if (t + 1) % eval_every == 0 or t == rounds - 1:
+                acc = task.evaluate(theta)
+                history.append({"round": t + 1, "acc": float(acc),
+                                "cum_bits": meter.total_bits,
+                                "bpp_so_far": meter.total_bpp})
+
+        return {"history": history, "meter": meter.summary(),
+                "theta": theta, "theta_hat": theta_hat,
+                "final_acc": history[-1]["acc"] if history else float("nan"),
+                "max_acc": max(h["acc"] for h in history) if history else float("nan")}
+
+
+def run_spec(task, spec: EngineSpec, shards: Dataset,
+             theta0: Optional[jax.Array] = None, *, rounds: int,
+             seed: int = 0, eval_every: int = 1) -> Dict[str, Any]:
+    """Convenience one-shot: build an engine and run it."""
+    return FLEngine(task, spec).run(shards, theta0, rounds=rounds, seed=seed,
+                                    eval_every=eval_every)

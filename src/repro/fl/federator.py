@@ -1,4 +1,4 @@
-"""BiCompFL federator loops (paper Algorithms 1 & 2 + variants).
+"""BiCompFL federator entry points (paper Algorithms 1 & 2 + variants).
 
 Implemented variants (cfg.variant):
 
@@ -15,41 +15,24 @@ Implemented variants (cfg.variant):
 
 The uplink/downlink priors are the clients' latest global-model estimates
 (theta_hat), exactly as the paper settles on (lambda = 1).
+
+These functions are thin, backwards-compatible wrappers: each builds an
+:class:`~repro.fl.engine.EngineSpec` from the scheme registry and runs the
+shared :class:`~repro.fl.engine.FLEngine` round loop.  New scenarios should
+compose channels directly (see DESIGN.md) rather than grow these configs.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import mrc
-from repro.core.bernoulli import bern_kl, clip01
-from repro.core.bitmeter import BitMeter
-from repro.core.blocks import AdaptiveAllocation, FixedAllocation
+from repro.core.blocks import FixedAllocation
+from . import registry
+from .channels import from_blocks, to_blocks  # noqa: F401  (back-compat)
 from .data import Dataset
-
-
-# ---------------------------------------------------------------------------
-# Block helpers.  Pad value 0.5 for BOTH q and p => padded entries have zero
-# KL and never influence the selected index.
-# ---------------------------------------------------------------------------
-
-
-def to_blocks(v: jax.Array, size: int) -> jax.Array:
-    d = v.shape[-1]
-    b = -(-d // size)
-    pad = b * size - d
-    if pad:
-        v = jnp.concatenate([v, jnp.full(v.shape[:-1] + (pad,), 0.5, v.dtype)], axis=-1)
-    return v.reshape(v.shape[:-1] + (b, size))
-
-
-def from_blocks(m: jax.Array, d: int) -> jax.Array:
-    return m.reshape(m.shape[:-2] + (-1,))[..., :d]
+from .engine import FLEngine
 
 
 @dataclass
@@ -70,151 +53,16 @@ class BiCompFLConfig:
                                  # with global shared randomness)
 
 
-def _uplink_bits(n_clients, n_ul, n_blocks, n_is):
-    return n_clients * n_ul * n_blocks * math.log2(n_is)
-
-
 def run_bicompfl(task, shards: Dataset, cfg: BiCompFLConfig) -> Dict[str, Any]:
     """Run probabilistic-mask BiCompFL; returns history + bit accounting."""
     n = int(shards.x.shape[0])
-    d = task.d
     n_dl = cfg.n_dl if cfg.n_dl is not None else n * cfg.n_ul
-    base = jax.random.PRNGKey(cfg.seed)
-    is_gr = cfg.variant.startswith("GR")
-    meter = BitMeter(n_clients=n, d=d, broadcast_downlink_shareable=is_gr)
-
-    theta_hat = jnp.tile(task.init_theta()[None], (n, 1))  # per-client estimates
-    history: List[Dict[str, float]] = []
-    adaptive = isinstance(cfg.allocation, AdaptiveAllocation)
-
-    if cfg.participation < 1.0 and cfg.variant != "PR":
-        raise ValueError("partial participation requires private shared "
-                         "randomness (the PR variant); GR needs all clients "
-                         "to track the common candidate stream, and SplitDL "
-                         "partitions the downlink across the full cohort")
-    n_active = max(1, int(round(cfg.participation * n)))
-    rng = np.random.default_rng(cfg.seed + 17)
-
-    log2_nis = math.log2(cfg.n_is)
-    for t in range(cfg.rounds):
-        kt = mrc.round_key(base, t)
-        active = sorted(rng.choice(n, size=n_active, replace=False)) \
-            if n_active < n else list(range(n))
-        train_keys = jax.random.split(jax.random.fold_in(kt, 1), n)
-
-        # ---- local training (vmapped over clients) ----------------------
-        q = jax.vmap(task.local_train)(theta_hat, shards.x, shards.y, train_keys)
-        q = clip01(q)
-
-        # ---- block allocation (host-side control plane) -----------------
-        kl_mean = np.asarray(jnp.mean(jax.vmap(bern_kl)(q, clip01(theta_hat)), axis=0))
-        size, n_blocks, seg_ids, overhead = cfg.allocation.plan(kl_mean, d)
-
-        # ---- uplink: each client conveys n_UL posterior samples ----------
-        def up_one(i, q_i, p_i):
-            skey = kt if is_gr else mrc.client_key(kt, i)
-            sel = jax.random.fold_in(jax.random.fold_in(kt, 2), i)
-            if adaptive:
-                idxs, q_hat = mrc.transmit_segments(
-                    skey, sel, q_i, clip01(p_i), jnp.asarray(seg_ids),
-                    n_is=cfg.n_is, n_seg=n_blocks, n_samples=cfg.n_ul)
-                return idxs, q_hat
-            qb, pb = to_blocks(q_i, size), to_blocks(clip01(p_i), size)
-            idxs, q_hat_b = mrc.transmit_fixed(
-                skey, sel, qb, pb, n_is=cfg.n_is, n_samples=cfg.n_ul,
-                chunk=cfg.chunk, logw_fn=cfg.logw_fn)
-            return idxs, from_blocks(q_hat_b, d)
-
-        q_hats = []
-        for i in active:
-            _, q_hat_i = up_one(i, q[i], theta_hat[i])
-            q_hats.append(q_hat_i)
-        q_hat = jnp.stack(q_hats)                 # (n_active, d) fed. estimates
-        theta_next = jnp.mean(q_hat, axis=0)           # server global model
-
-        ul_bits = _uplink_bits(len(active), cfg.n_ul, n_blocks, cfg.n_is)
-
-        # ---- downlink ----------------------------------------------------
-        if cfg.variant == "GR":
-            # Relay the other clients' indices; with common candidates every
-            # client reconstructs q_hat exactly => estimate == server model.
-            theta_hat = jnp.tile(theta_next[None], (n, 1))
-            dl_bits = n * (n - 1) * cfg.n_ul * n_blocks * log2_nis
-        elif cfg.variant == "GR-Reconst":
-            skey = jax.random.fold_in(kt, 3)
-            sel = jax.random.fold_in(kt, 4)
-            p_common = clip01(theta_hat[0])
-            if adaptive:
-                _, est = mrc.transmit_segments(
-                    skey, sel, theta_next, p_common, jnp.asarray(seg_ids),
-                    n_is=cfg.n_is, n_seg=n_blocks, n_samples=n_dl)
-            else:
-                _, est_b = mrc.transmit_fixed(
-                    skey, sel, to_blocks(theta_next, size), to_blocks(p_common, size),
-                    n_is=cfg.n_is, n_samples=n_dl, chunk=cfg.chunk, logw_fn=cfg.logw_fn)
-                est = from_blocks(est_b, d)
-            theta_hat = jnp.tile(clip01(est)[None], (n, 1))
-            dl_bits = n * n_dl * n_blocks * log2_nis
-        elif cfg.variant == "PR":
-            # partial participation: only active clients receive the
-            # downlink; stragglers keep their stale estimates (paper Sec. 3:
-            # PR is the variant compatible with partial participation)
-            new_hats = list(theta_hat)
-            for i in active:
-                skey = jax.random.fold_in(mrc.client_key(kt, i), 3)
-                sel = jax.random.fold_in(jax.random.fold_in(kt, 5), i)
-                if adaptive:
-                    _, est = mrc.transmit_segments(
-                        skey, sel, theta_next, clip01(theta_hat[i]), jnp.asarray(seg_ids),
-                        n_is=cfg.n_is, n_seg=n_blocks, n_samples=n_dl)
-                else:
-                    _, est_b = mrc.transmit_fixed(
-                        skey, sel, to_blocks(theta_next, size),
-                        to_blocks(clip01(theta_hat[i]), size),
-                        n_is=cfg.n_is, n_samples=n_dl, chunk=cfg.chunk, logw_fn=cfg.logw_fn)
-                    est = from_blocks(est_b, d)
-                new_hats[i] = clip01(est)
-            theta_hat = jnp.stack(new_hats)
-            dl_bits = len(active) * n_dl * n_blocks * log2_nis
-        elif cfg.variant == "PR-SplitDL":
-            if adaptive:
-                raise NotImplementedError("SplitDL is defined on fixed blocks")
-            tb = to_blocks(theta_next, size)           # (B, S)
-            new_hats = []
-            blocks_per_client = 0
-            for i in range(n):
-                own = np.arange(i, n_blocks, n)         # disjoint 1/n of blocks
-                blocks_per_client = max(blocks_per_client, len(own))
-                skey = jax.random.fold_in(mrc.client_key(kt, i), 3)
-                sel = jax.random.fold_in(jax.random.fold_in(kt, 5), i)
-                hb = to_blocks(clip01(theta_hat[i]), size)
-                _, est_b = mrc.transmit_fixed(
-                    skey, sel, tb[own], hb[own], n_is=cfg.n_is, n_samples=n_dl,
-                    chunk=min(cfg.chunk, max(len(own), 1)), logw_fn=cfg.logw_fn)
-                hb = hb.at[own].set(clip01(est_b))
-                new_hats.append(from_blocks(hb, d))
-            theta_hat = jnp.stack(new_hats)
-            dl_bits = n * n_dl * blocks_per_client * log2_nis
-        else:
-            raise ValueError(cfg.variant)
-
-        meter.add_round(ul_bits, dl_bits, overhead_bits=overhead * n)
-
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            acc = task.evaluate(theta_next)
-            history.append({"round": t + 1, "acc": float(acc),
-                            "cum_bits": meter.total_bits,
-                            "bpp_so_far": meter.total_bpp})
-
-    return {"history": history, "meter": meter.summary(),
-            "theta": theta_next, "theta_hat": theta_hat,
-            "final_acc": history[-1]["acc"] if history else float("nan"),
-            "max_acc": max(h["acc"] for h in history) if history else float("nan")}
-
-
-# ---------------------------------------------------------------------------
-# BiCompFL-GR-CFL: conventional FL with stochastic sign + MRC (Section 4/5).
-# ---------------------------------------------------------------------------
+    spec = registry.bicompfl_spec(
+        cfg.variant, allocation=cfg.allocation, n_is=cfg.n_is, n_ul=cfg.n_ul,
+        n_dl=n_dl, chunk=cfg.chunk, logw_fn=cfg.logw_fn,
+        participation=cfg.participation)
+    return FLEngine(task, spec).run(shards, rounds=cfg.rounds, seed=cfg.seed,
+                                    eval_every=cfg.eval_every)
 
 
 @dataclass
@@ -234,7 +82,8 @@ class CFLConfig:
     logw_fn: Any = None
 
 
-def run_bicompfl_cfl(task, theta0: jax.Array, shards: Dataset, cfg: CFLConfig) -> Dict[str, Any]:
+def run_bicompfl_cfl(task, theta0: jax.Array, shards: Dataset,
+                     cfg: CFLConfig) -> Dict[str, Any]:
     """BiCompFL-GR applied to conventional FL with stochastic SignSGD.
 
     Clients quantize their local delta with q = sigmoid(delta / K), convey
@@ -243,46 +92,9 @@ def run_bicompfl_cfl(task, theta0: jax.Array, shards: Dataset, cfg: CFLConfig) -
     are relayed on the downlink (global randomness) so the clients track the
     identical global model.
     """
-    n = int(shards.x.shape[0])
-    d = int(theta0.shape[0])
-    base = jax.random.PRNGKey(cfg.seed)
-    meter = BitMeter(n_clients=n, d=d, broadcast_downlink_shareable=True)
-    theta = theta0
-    n_blocks = -(-d // cfg.block_size)
-    log2_nis = math.log2(cfg.n_is)
-    history: List[Dict[str, float]] = []
-
-    p_blocks = jnp.full((n_blocks, cfg.block_size), 0.5, jnp.float32)
-
-    for t in range(cfg.rounds):
-        kt = mrc.round_key(base, t)
-        train_keys = jax.random.split(jax.random.fold_in(kt, 1), n)
-        deltas = jax.vmap(task.local_train)(
-            jnp.tile(theta[None], (n, 1)), shards.x, shards.y, train_keys)  # (n, d)
-
-        g_hats = []
-        for i in range(n):
-            delta = deltas[i]
-            K = jnp.mean(jnp.abs(delta)) + 1e-12
-            q_i = clip01(jax.nn.sigmoid(delta / K))
-            sel = jax.random.fold_in(jax.random.fold_in(kt, 2), i)
-            _, q_hat_b = mrc.transmit_fixed(
-                kt, sel, to_blocks(q_i, cfg.block_size), p_blocks,
-                n_is=cfg.n_is, n_samples=cfg.n_ul, chunk=cfg.chunk, logw_fn=cfg.logw_fn)
-            q_hat = from_blocks(q_hat_b, d)
-            g_hats.append((2.0 * q_hat - 1.0) * K)     # scale is 32-bit side info
-        g_hat = jnp.mean(jnp.stack(g_hats), axis=0)
-        theta = theta - cfg.server_lr * g_hat
-
-        ul = _uplink_bits(n, cfg.n_ul, n_blocks, cfg.n_is) + 32 * n  # + scales
-        dl = n * (n - 1) * cfg.n_ul * n_blocks * log2_nis + 32 * n * (n - 1)
-        meter.add_round(ul, dl)
-
-        if (t + 1) % cfg.eval_every == 0 or t == cfg.rounds - 1:
-            acc = task.evaluate(theta)
-            history.append({"round": t + 1, "acc": float(acc),
-                            "cum_bits": meter.total_bits})
-
-    return {"history": history, "meter": meter.summary(), "theta": theta,
-            "final_acc": history[-1]["acc"] if history else float("nan"),
-            "max_acc": max(h["acc"] for h in history) if history else float("nan")}
+    spec = registry.cfl_spec(n_is=cfg.n_is, n_ul=cfg.n_ul,
+                             block_size=cfg.block_size,
+                             server_lr=cfg.server_lr, chunk=cfg.chunk,
+                             logw_fn=cfg.logw_fn)
+    return FLEngine(task, spec).run(shards, theta0, rounds=cfg.rounds,
+                                    seed=cfg.seed, eval_every=cfg.eval_every)

@@ -1,0 +1,140 @@
+"""Scheme registry: config -> (uplink, downlink, aggregator) factories.
+
+Every named FL scheme in the repo is a factory returning an
+:class:`~repro.fl.engine.EngineSpec`.  The old string-dispatch if/else
+chains in ``run_bicompfl`` / ``run_baseline`` are gone; adding a scheme is
+one entry here.  New combinations that no seed loop could express -- e.g.
+an MRC uplink with a sign-EF downlink -- are just a hand-rolled EngineSpec
+from the same channel parts (see tests/test_channels.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.blocks import AdaptiveAllocation, FixedAllocation
+from repro.core.quantizers import FLOAT_BITS
+from .channels import (DenseChannel, IndexRelayDownlink, MRCAdaptiveChannel,
+                       MRCBroadcastDownlink, MRCFixedChannel,
+                       MRCPrivateDownlink, QuantizedMRCUplink, SignEFChannel,
+                       SliceDownlink, SplitBlockDownlink, TopKEFChannel)
+from .engine import EngineSpec, MeanDeltaAggregator, MeanModelAggregator
+
+BICOMPFL_VARIANTS = ("GR", "GR-Reconst", "PR", "PR-SplitDL")
+
+
+def bicompfl_spec(variant: str, *, allocation, n_is: int = 256, n_ul: int = 1,
+                  n_dl: int = 1, chunk: int = 16, logw_fn=None,
+                  participation: float = 1.0) -> EngineSpec:
+    """BiCompFL (probabilistic-mask) variants, paper Algorithms 1 & 2.
+
+    ``n_dl`` must be resolved by the caller (the paper default is
+    ``n_clients * n_ul``, which needs the cohort size).
+    """
+    if variant not in BICOMPFL_VARIANTS:
+        raise ValueError(variant)
+    if participation < 1.0 and variant != "PR":
+        raise ValueError("partial participation requires private shared "
+                         "randomness (the PR variant); GR needs all clients "
+                         "to track the common candidate stream, and SplitDL "
+                         "partitions the downlink across the full cohort")
+    shared = variant.startswith("GR")
+    adaptive = isinstance(allocation, AdaptiveAllocation)
+    if adaptive:
+        uplink = MRCAdaptiveChannel(n_is=n_is, n_samples=n_ul, shared=shared)
+    else:
+        uplink = MRCFixedChannel(n_is=n_is, n_samples=n_ul, shared=shared,
+                                 chunk=chunk, logw_fn=logw_fn)
+    if variant == "GR":
+        downlink = IndexRelayDownlink(n_is=n_is, n_samples=n_ul)
+    elif variant == "GR-Reconst":
+        downlink = MRCBroadcastDownlink(n_is=n_is, n_samples=n_dl,
+                                        chunk=chunk, logw_fn=logw_fn)
+    elif variant == "PR":
+        downlink = MRCPrivateDownlink(n_is=n_is, n_samples=n_dl,
+                                      chunk=chunk, logw_fn=logw_fn)
+    else:  # PR-SplitDL
+        if adaptive:
+            raise NotImplementedError("SplitDL is defined on fixed blocks")
+        downlink = SplitBlockDownlink(n_is=n_is, n_samples=n_dl,
+                                      chunk=chunk, logw_fn=logw_fn)
+    return EngineSpec(uplink=uplink, downlink=downlink,
+                      aggregator=MeanModelAggregator(), allocation=allocation,
+                      participation=participation,
+                      name=f"BiCompFL-{variant}")
+
+
+def cfl_spec(*, n_is: int = 256, n_ul: int = 1, block_size: int = 16,
+             server_lr: float = 1.0, chunk: int = 16, logw_fn=None) -> EngineSpec:
+    """BiCompFL-GR-CFL: stochastic sign + MRC in conventional FL (Sec. 4)."""
+    return EngineSpec(
+        uplink=QuantizedMRCUplink(n_is=n_is, n_samples=n_ul, chunk=chunk,
+                                  logw_fn=logw_fn),
+        downlink=IndexRelayDownlink(n_is=n_is, n_samples=n_ul,
+                                    side_info_bits=FLOAT_BITS),
+        aggregator=MeanDeltaAggregator(server_lr),
+        allocation=FixedAllocation(block_size),
+        name="BiCompFL-GR-CFL")
+
+
+# ---------------------------------------------------------------------------
+# Non-stochastic baselines (paper Section 4); simplifications cf. DESIGN.md.
+# ---------------------------------------------------------------------------
+
+
+def _fedavg(n, d, lr, period):
+    return EngineSpec(DenseChannel(), DenseChannel(), MeanDeltaAggregator(lr),
+                      name="fedavg")
+
+
+def _memsgd(n, d, lr, period):
+    return EngineSpec(SignEFChannel(), DenseChannel(), MeanDeltaAggregator(lr),
+                      name="memsgd")
+
+
+def _doublesqueeze(n, d, lr, period):
+    return EngineSpec(SignEFChannel(), SignEFChannel(), MeanDeltaAggregator(lr),
+                      name="doublesqueeze")
+
+
+def _neolithic(n, d, lr, period):
+    return EngineSpec(SignEFChannel(passes=2), SignEFChannel(passes=2),
+                      MeanDeltaAggregator(lr), name="neolithic")
+
+
+def _cser(n, d, lr, period):
+    return EngineSpec(SignEFChannel(), DenseChannel(), MeanDeltaAggregator(lr),
+                      sync_period=period, name="cser")
+
+
+def _liec(n, d, lr, period):
+    return EngineSpec(SignEFChannel(), SignEFChannel(), MeanDeltaAggregator(lr),
+                      sync_period=period, name="liec")
+
+
+def _m3(n, d, lr, period):
+    k = max(d // n, 1)  # one budget shared by the top-k uplink and the slices
+    return EngineSpec(TopKEFChannel(k=k), SliceDownlink(k=k),
+                      MeanDeltaAggregator(lr), name="m3")
+
+
+BASELINE_BUILDERS: Dict[str, Callable[[int, int, float, int], EngineSpec]] = {
+    "fedavg": _fedavg,
+    "memsgd": _memsgd,
+    "doublesqueeze": _doublesqueeze,
+    "neolithic": _neolithic,
+    "cser": _cser,
+    "liec": _liec,
+    "m3": _m3,
+}
+
+ALL_BASELINES = tuple(BASELINE_BUILDERS)
+
+
+def baseline_spec(scheme: str, *, n: int, d: int, server_lr: float = 1.0,
+                  reset_period: int = 50) -> EngineSpec:
+    """Build a baseline EngineSpec; needs cohort size and model dimension
+    (M3's top-k budget is d/n)."""
+    key = scheme.lower()
+    if key not in BASELINE_BUILDERS:
+        raise ValueError(scheme)
+    return BASELINE_BUILDERS[key](n, d, server_lr, reset_period)

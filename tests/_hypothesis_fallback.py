@@ -1,0 +1,71 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+The container image has no `hypothesis`; instead of skipping the whole
+property-test modules we replace `given/settings/st` with a tiny fixed-seed
+sampler: each strategy contributes its range endpoints, midpoint, and a few
+seeded uniform draws, and the decorated test body runs once per sampled
+combination.  No shrinking, no database -- just deterministic coverage of
+the same parameter ranges.  With `hypothesis` installed the real library is
+used (see the try/except import in the test modules).
+"""
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+N_SAMPLES = 8
+
+
+def _seed(*parts) -> int:
+    # hash() is salted per process (PYTHONHASHSEED); crc32 of the repr keeps
+    # the sampled inputs identical across runs, as "deterministic" promises.
+    return zlib.crc32(repr(parts).encode())
+
+
+class _Strategy:
+    def __init__(self, values):
+        self.values = list(values)
+
+
+class st:  # mirrors `hypothesis.strategies` for the subset the tests use
+    @staticmethod
+    def floats(min_value, max_value):
+        rnd = random.Random(_seed("floats", min_value, max_value))
+        vals = [min_value, max_value, 0.5 * (min_value + max_value)]
+        vals += [min_value + (max_value - min_value) * rnd.random()
+                 for _ in range(N_SAMPLES - len(vals))]
+        return _Strategy(vals)
+
+    @staticmethod
+    def integers(min_value, max_value):
+        rnd = random.Random(_seed("integers", min_value, max_value))
+        vals = {min_value, max_value, (min_value + max_value) // 2}
+        while len(vals) < min(N_SAMPLES, max_value - min_value + 1):
+            vals.add(rnd.randint(min_value, max_value))
+        return _Strategy(sorted(vals))
+
+
+def given(*strategies):
+    """Run the test once per sampled combination (zip of rotated samples)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):  # args = (self,) for method tests
+            for k in range(N_SAMPLES):
+                combo = tuple(s.values[(k + 3 * i) % len(s.values)]
+                              for i, s in enumerate(strategies))
+                fn(*args, *combo, **kwargs)
+        # pytest introspects signatures through __wrapped__ and would treat
+        # the sampled parameters as fixtures; hide the original signature.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def settings(**kwargs):  # max_examples / deadline are meaningless here
+    def deco(fn):
+        return fn
+
+    return deco

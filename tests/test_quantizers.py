@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import mrc, quantizers as Q
 from repro.core.bernoulli import clip01
