@@ -1,0 +1,134 @@
+"""FL round throughput: host loop vs fused (device-resident) scan.
+
+Measures rounds/sec for the same spec executed by the engine's two paths on
+the paper's MNIST-MLP analog (synthetic 10-class images, 1-hidden-layer
+MLP) and records the result in ``BENCH_fl_rounds.json`` so the fused-path
+speedup is a tracked number, not a claim.
+
+Per scheme we record:
+
+* ``host_s`` / ``host_rps``     -- host-loop wall time (jitted
+  sub-computations compile on round 1 and are reused, exactly how the
+  engine was driven before this benchmark existed);
+* ``fused_cold_s``              -- fused path including its one-off whole-
+  program compile (what a single cold run pays);
+* ``fused_s`` / ``fused_rps``   -- fused path re-run after compilation (the
+  steady-state cost of every further run / seed / restart in a sweep);
+* ``speedup`` = host_rps-to-fused_rps ratio, plus ``speedup_cold``.
+
+Run:  PYTHONPATH=src python -m benchmarks.fl_round_bench [--fast]
+      [--rounds N] [--out BENCH_fl_rounds.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import numpy as np
+
+from repro.core.blocks import FixedAllocation
+from repro.fl import registry
+from repro.fl.data import make_synthetic, partition_iid
+from repro.fl.engine import FLEngine
+from repro.fl.nets import make_mlp
+from repro.fl.tasks import make_cfl_task, make_mask_task
+
+
+def build_setup(fast: bool):
+    """MNIST-MLP analog: 10 clients, 10x10 synthetic images, width-256 MLP
+    (--fast shrinks everything for CI smoke)."""
+    hw = 6 if fast else 10
+    width = 32 if fast else 256
+    n_clients = 4 if fast else 10
+    n_train = 240 if fast else 2000
+    k = jax.random.PRNGKey(0)
+    train, test = make_synthetic(k, n_train=n_train,
+                                 n_test=120 if fast else 400, hw=hw, noise=0.5)
+    shards = partition_iid(jax.random.fold_in(k, 1), train, n_clients,
+                           n_train // n_clients)
+    net = make_mlp(in_dim=hw * hw, widths=(width,), signed_constant=True)
+    task = make_mask_task(net, jax.random.fold_in(k, 2), test.x, test.y,
+                          local_epochs=1 if fast else 3,
+                          batch_size=40 if fast else 128)
+    cnet = make_mlp(in_dim=hw * hw, widths=(width,))
+    ctask, theta0 = make_cfl_task(cnet, jax.random.fold_in(k, 3), test.x,
+                                  test.y, local_epochs=1 if fast else 3,
+                                  batch_size=40 if fast else 128,
+                                  local_lr=3e-3)
+    return task, ctask, theta0, shards, n_clients
+
+
+def bench_scheme(name, task, spec_factory, shards, theta0, *, rounds,
+                 eval_every):
+    res = {}
+
+    def run(mode):
+        t0 = time.perf_counter()
+        out = FLEngine(task, spec_factory()).run(
+            shards, theta0, rounds=rounds, seed=0, eval_every=eval_every,
+            mode=mode)
+        return time.perf_counter() - t0, out
+
+    host_s, host_out = run("host")
+    cold_s, _ = run("fused")
+    fused_s, fused_out = run("fused")  # warm: whole-run XLA program cached
+    np.testing.assert_array_equal(np.asarray(host_out["theta"]),
+                                  np.asarray(fused_out["theta"]))  # oracle
+    res.update(
+        host_s=round(host_s, 3), host_rps=round(rounds / host_s, 2),
+        fused_cold_s=round(cold_s, 3),
+        fused_s=round(fused_s, 3), fused_rps=round(rounds / fused_s, 2),
+        speedup=round(host_s / fused_s, 2),
+        speedup_cold=round(host_s / cold_s, 2),
+        final_acc=host_out["final_acc"])
+    print(f"{name:18s} host={host_s:7.2f}s ({res['host_rps']:7.1f} r/s)  "
+          f"fused={fused_s:7.2f}s ({res['fused_rps']:7.1f} r/s)  "
+          f"cold={cold_s:7.2f}s  speedup={res['speedup']:5.2f}x "
+          f"(cold {res['speedup_cold']:4.2f}x)", flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="BENCH_fl_rounds.json")
+    args = ap.parse_args()
+    rounds = args.rounds or (30 if args.fast else 200)
+    eval_every = max(rounds // 10, 1)
+
+    task, ctask, theta0, shards, n = build_setup(args.fast)
+    d_mask = task.d
+    d_cfl = int(theta0.shape[0])
+    print(f"== fl_round_bench: {rounds} rounds, {n} clients, "
+          f"d_mask={d_mask}, d_cfl={d_cfl}, eval_every={eval_every} ==")
+
+    schemes = {
+        "bicompfl-gr": (task, None, lambda: registry.bicompfl_spec(
+            "GR", allocation=FixedAllocation(128), n_is=64, n_dl=n)),
+        "fedavg": (ctask, theta0, lambda: registry.baseline_spec(
+            "fedavg", n=n, d=d_cfl)),
+    }
+    results = {}
+    for name, (t, th0, factory) in schemes.items():
+        results[name] = bench_scheme(name, t, factory, shards, th0,
+                                     rounds=rounds, eval_every=eval_every)
+        jax.clear_caches()
+
+    payload = {
+        "config": {"rounds": rounds, "n_clients": n, "d_mask": d_mask,
+                   "d_cfl": d_cfl, "eval_every": eval_every,
+                   "fast": args.fast, "machine": platform.machine(),
+                   "backend": jax.default_backend()},
+        "schemes": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

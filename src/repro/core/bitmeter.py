@@ -39,6 +39,25 @@ class BitMeter:
             "cum_bits": self.uplink_bits + self.downlink_bits,
         })
 
+    def book_run(self, uplink_bits, downlink_bits, overhead_bits: float = 0.0,
+                 snapshot_mask=None):
+        """Book a whole run's rounds in one call (per-round total sequences).
+
+        Used after a fused (device-resident) execution: per-round bit
+        totals are data-independent, so they never live on the device and
+        the meter replays them host-side with the same per-round float
+        arithmetic as the host loop.  Returns the ``(total_bits,
+        total_bpp)`` snapshot after each round where ``snapshot_mask`` is
+        True (every round when None) -- the values the engine's history
+        entries record at evaluation rounds.
+        """
+        snaps = []
+        for t, (u, dl) in enumerate(zip(uplink_bits, downlink_bits)):
+            self.add_round(u, dl, overhead_bits=overhead_bits)
+            if snapshot_mask is None or snapshot_mask[t]:
+                snaps.append((self.total_bits, self.total_bpp))
+        return snaps
+
     # --- per-client per-param per-round averages (the table columns) -----
     def _per(self, bits: float) -> float:
         if self.rounds == 0:

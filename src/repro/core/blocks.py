@@ -33,6 +33,7 @@ class FixedAllocation:
 
     name = "Fixed"
     needs_kl = False  # plan() ignores the KL profile; lets the engine skip it
+    static_plan = True  # round-independent: eligible for the fused scan path
 
     def blocks_for(self, d: int) -> int:
         return _pad_to(d, self.block_size) // self.block_size
@@ -58,6 +59,7 @@ class AdaptiveAvgAllocation:
 
     name = "Adaptive-Avg"
     needs_kl = True
+    static_plan = False  # per-round size retuning is host control plane
 
     def plan(self, kl_per_param: Optional[np.ndarray], d: int):
         if kl_per_param is None:
@@ -88,6 +90,7 @@ class AdaptiveAllocation:
 
     name = "Adaptive"
     needs_kl = True
+    static_plan = False  # per-round KL binning is host control plane
 
     def plan(self, kl_per_param: Optional[np.ndarray], d: int):
         if kl_per_param is None:

@@ -6,9 +6,15 @@ a first-class object: a :class:`Channel` encodes what one party sends, what
 the other party reconstructs, and **how many bits crossed the wire** -- the
 bit accounting lives in the channel, not in the training loop.
 
+Functional core
+---------------
+Every channel is a *pure* function over an explicit state pytree, so the
+engine can run the whole multi-round loop as one ``jax.lax.scan`` (the
+device-resident fused path, cf. ``engine.FLEngine``):
+
 Uplink channels implement::
 
-    transmit(ctx, payload, priors) -> (server_side_estimates, bits)
+    step_up(ctx, state, payload, priors) -> (server_side_estimates, bits, state)
 
 where ``payload`` is the per-active-client message source -- Bernoulli
 posteriors ``q`` for the probabilistic-mask path, weight deltas for
@@ -17,17 +23,28 @@ estimates (the MRC prior; ignored by the non-stochastic compressors).
 
 Downlink channels implement::
 
-    distribute(ctx, update, theta, theta_hat) -> DownlinkResult
+    step_down(ctx, state, update, theta, theta_hat) -> (DownlinkResult, state)
 
 receiving the aggregator's proposed :class:`ServerUpdate` and returning the
 *final* server model, the new per-client estimates and the downlink bits.
 The downlink owns the final model update because some schemes (sign-EF a la
 DoubleSqueeze) have the server itself step with the *compressed* aggregate.
 
-Channels may hold state (error-feedback memories); instantiate a fresh
-channel per run.  ``flush()`` supports the periodic error-reset of CSER /
-LIEC: it returns the residual the server should apply plus the dense bits
-the synchronisation costs.
+State is any pytree: ``()`` for stateless channels, the error-feedback
+memory array for the EF compressors.  ``init_up_state(n, d)`` /
+``init_down_state(n, d)`` build the initial state;
+``flush_step(state, n, d) -> (residual, bits, state)`` implements the
+periodic error-reset of CSER / LIEC.  **Bits are data-independent**: every
+``bits`` return value is a plain Python float computed from static shapes
+and the round's :class:`BlockPlan`, never a traced array -- which is what
+lets the fused engine book communication host-side with zero device syncs.
+
+Object shell
+------------
+The pre-existing stateful API (``transmit`` / ``distribute`` / ``flush`` /
+``reset``) is a thin wrapper over the functional core: the shell owns the
+state pytree and threads it through the pure steps.  Instantiate a fresh
+channel per run (or ``reset()`` it) exactly as before.
 
 Key-derivation tags reproduce the seed loops exactly, so the engine is
 bit-for-bit compatible with the original ``run_bicompfl`` (see
@@ -57,6 +74,41 @@ TAG_UL_SELECT = 2      # uplink Gumbel selection stream
 TAG_DL_SHARED = 3      # downlink candidate stream
 TAG_DL_SELECT_COMMON = 4   # downlink selection, common (GR-Reconst)
 TAG_DL_SELECT_PRIVATE = 5  # downlink selection, per-client (PR variants)
+TAG_COHORT = 6         # jax-native cohort sampling (engine, cohort_rng="jax")
+
+# State pytree of a stateless channel: no leaves, trivially scan-carriable.
+EMPTY_STATE: Tuple = ()
+
+
+def pin(token, x):
+    """Pin ``x``'s rounding against re-fusion inside one compiled program.
+
+    The host loop materialises each stage's output between separately
+    compiled dispatches; inside the engine's fused scan XLA instead fuses
+    values into their consumers and LLVM FMA-contracts chains like
+    ``theta - lr * mean(...)`` into a single rounding, breaking bit-parity
+    with the host path.  ``optimization_barrier`` is deleted by the CPU
+    pipeline and a select on a runtime predicate gets *sunk through* the
+    arithmetic, so the robust pin routes the value through integer space:
+    ``bitcast_f32->i32 -> add(token) -> bitcast_i32->f32`` where ``token``
+    is a *traced* int32 zero (``RoundContext.pin_token``, fed from the scan
+    xs so nothing can constant-fold it).  Adding integer zero is the exact
+    identity on the bit pattern, and no floating-point rewrite crosses an
+    integer op -- the f32 value is forced to its rounded form before any
+    consumer sees it.  On the host path ``token`` is None and this is a
+    no-op.  Only float32 leaves are touched; other dtypes are exact anyway.
+    """
+    if token is None:
+        return x
+
+    def _pin(v):
+        v = jnp.asarray(v)
+        if v.dtype != jnp.float32:
+            return v
+        bits = jax.lax.bitcast_convert_type(v, jnp.int32)
+        return jax.lax.bitcast_convert_type(bits + token, jnp.float32)
+
+    return jax.tree.map(_pin, x)
 
 
 def _vfold(key: jax.Array, ids: jax.Array) -> jax.Array:
@@ -109,14 +161,20 @@ class BlockPlan:
 
 @dataclass(frozen=True)
 class RoundContext:
-    """Everything a channel may need about the current global round."""
+    """Everything a channel may need about the current global round.
 
-    t: int
+    In the fused engine path ``t``, ``key`` and ``active`` are traced scan
+    values (``active`` a jnp int vector); channels must only use them in
+    traceable positions.  Cohort *size* stays static either way.
+    """
+
+    t: Any
     key: jax.Array        # kt = mrc.round_key(base, t) -- shared randomness
     n_clients: int
     d: int
-    active: np.ndarray    # sorted global ids of the participating cohort
+    active: Any           # sorted global ids of the participating cohort
     plan: Optional[BlockPlan] = None
+    pin_token: Any = None  # traced int32 zero in the fused path (cf. pin)
 
     @property
     def n_active(self) -> int:
@@ -149,6 +207,11 @@ class DownlinkResult(NamedTuple):
 
 @runtime_checkable
 class UplinkChannel(Protocol):
+    def init_up_state(self, n: int, d: int): ...
+
+    def step_up(self, ctx: RoundContext, state, payload: jax.Array,
+                priors: jax.Array) -> Tuple[jax.Array, float, Any]: ...
+
     def transmit(self, ctx: RoundContext, payload: jax.Array,
                  priors: jax.Array) -> Tuple[jax.Array, float]: ...
 
@@ -157,12 +220,53 @@ class UplinkChannel(Protocol):
 class DownlinkChannel(Protocol):
     broadcast_shareable: bool
 
+    def init_down_state(self, n: int, d: int): ...
+
+    def step_down(self, ctx: RoundContext, state, update: ServerUpdate,
+                  theta: jax.Array,
+                  theta_hat: jax.Array) -> Tuple[DownlinkResult, Any]: ...
+
     def distribute(self, ctx: RoundContext, update: ServerUpdate,
                    theta: jax.Array, theta_hat: jax.Array) -> DownlinkResult: ...
 
 
-def _no_flush(n: int, d: int):
-    return 0.0, 0.0
+# ---------------------------------------------------------------------------
+# Shell mixins: the stateful object API over the pure step functions.
+# ---------------------------------------------------------------------------
+
+
+class StatelessUplink:
+    """Object shell + trivial state for uplinks without memory."""
+
+    def init_up_state(self, n: int, d: int):
+        return EMPTY_STATE
+
+    def transmit(self, ctx, payload, priors):
+        out, bits, _ = self.step_up(ctx, EMPTY_STATE, payload, priors)
+        return out, bits
+
+    def flush_step(self, state, n: int, d: int):
+        return 0.0, 0.0, state
+
+    def flush(self, n: int, d: int):
+        return 0.0, 0.0
+
+
+class StatelessDownlink:
+    """Object shell + trivial state for downlinks without memory."""
+
+    def init_down_state(self, n: int, d: int):
+        return EMPTY_STATE
+
+    def distribute(self, ctx, update, theta, theta_hat):
+        res, _ = self.step_down(ctx, EMPTY_STATE, update, theta, theta_hat)
+        return res
+
+    def flush_step(self, state, n: int, d: int):
+        return 0.0, 0.0, state
+
+    def flush(self, n: int, d: int):
+        return 0.0, 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +275,7 @@ def _no_flush(n: int, d: int):
 
 
 @dataclass
-class MRCFixedChannel:
+class MRCFixedChannel(StatelessUplink):
     """Uplink MRC over fixed-size blocks, vmapped across the cohort.
 
     ``shared=True`` (GR) lets every client draw candidates from the *common*
@@ -184,7 +288,7 @@ class MRCFixedChannel:
     chunk: int = 16
     logw_fn: Any = None
 
-    def transmit(self, ctx, payload, priors):
+    def step_up(self, ctx, state, payload, priors):
         plan = ctx.plan
         kt = ctx.key
         qb = to_blocks(clip01(payload), plan.size)   # (n_act, B, S)
@@ -203,20 +307,18 @@ class MRCFixedChannel:
             skeys = _vclient_keys(kt, ctx.active_ids)
             q_hat_b = jax.vmap(one)(skeys, sels, qb, pb)
         bits = ctx.n_active * self.n_samples * plan.n_blocks * math.log2(self.n_is)
-        return from_blocks(q_hat_b, ctx.d), bits
-
-    flush = staticmethod(_no_flush)
+        return from_blocks(q_hat_b, ctx.d), bits, state
 
 
 @dataclass
-class MRCAdaptiveChannel:
+class MRCAdaptiveChannel(StatelessUplink):
     """Uplink MRC over variable-size segments (Isik et al. 2024 allocation)."""
 
     n_is: int = 256
     n_samples: int = 1
     shared: bool = True
 
-    def transmit(self, ctx, payload, priors):
+    def step_up(self, ctx, state, payload, priors):
         plan = ctx.plan
         kt = ctx.key
         seg = jnp.asarray(plan.seg_ids)
@@ -235,13 +337,11 @@ class MRCAdaptiveChannel:
             skeys = _vclient_keys(kt, ctx.active_ids)
             q_hat = jax.vmap(one)(skeys, sels, q, priors)
         bits = ctx.n_active * self.n_samples * plan.n_blocks * math.log2(self.n_is)
-        return q_hat, bits
-
-    flush = staticmethod(_no_flush)
+        return q_hat, bits, state
 
 
 @dataclass
-class QuantizedMRCUplink:
+class QuantizedMRCUplink(StatelessUplink):
     """Conventional-FL uplink: stochastic sign -> MRC vs the Ber(1/2) prior.
 
     Each client maps its delta to a Bernoulli posterior q = sigmoid(delta/K)
@@ -256,27 +356,29 @@ class QuantizedMRCUplink:
     logw_fn: Any = None
     side_info_bits: float = FLOAT_BITS
 
-    def transmit(self, ctx, payload, priors):
+    def step_up(self, ctx, state, payload, priors):
         plan = ctx.plan
         kt = ctx.key
         d = ctx.d
         p_blocks = jnp.full((plan.n_blocks, plan.size), 0.5, jnp.float32)
         sels = _vfold(jax.random.fold_in(kt, TAG_UL_SELECT), ctx.active_ids)
 
-        def one(sel, delta):
-            K = jnp.mean(jnp.abs(delta)) + 1e-12
+        # Each K fans into the posterior and the reconstruction rescale; pin
+        # the vector so the fused engine rounds like the host loop.
+        Ks = pin(ctx.pin_token,
+                 jax.vmap(lambda delta: jnp.mean(jnp.abs(delta)) + 1e-12)(payload))
+
+        def one(sel, delta, K):
             q_i = clip01(jax.nn.sigmoid(delta / K))
             _, q_hat_b = mrc.transmit_fixed(
                 kt, sel, to_blocks(q_i, plan.size), p_blocks, n_is=self.n_is,
                 n_samples=self.n_samples, chunk=self.chunk, logw_fn=self.logw_fn)
             return (2.0 * from_blocks(q_hat_b, d) - 1.0) * K
 
-        g_hat = jax.vmap(one)(sels, payload)
+        g_hat = jax.vmap(one)(sels, payload, Ks)
         bits = ctx.n_active * (self.n_samples * plan.n_blocks * math.log2(self.n_is)
                                + self.side_info_bits)
-        return g_hat, bits
-
-    flush = staticmethod(_no_flush)
+        return g_hat, bits, state
 
 
 # ---------------------------------------------------------------------------
@@ -285,7 +387,7 @@ class QuantizedMRCUplink:
 
 
 @dataclass
-class IndexRelayDownlink:
+class IndexRelayDownlink(StatelessDownlink):
     """GR downlink: relay the other clients' uplink indices.
 
     With common candidates every client reconstructs the identical global
@@ -299,18 +401,16 @@ class IndexRelayDownlink:
     side_info_bits: float = 0.0
     broadcast_shareable: bool = True
 
-    def distribute(self, ctx, update, theta, theta_hat):
+    def step_down(self, ctx, state, update, theta, theta_hat):
         n = ctx.n_clients
         th = update.theta
         bits = n * (n - 1) * (self.n_samples * ctx.plan.n_blocks
                               * math.log2(self.n_is) + self.side_info_bits)
-        return DownlinkResult(th, jnp.tile(th[None], (n, 1)), bits)
-
-    flush = staticmethod(_no_flush)
+        return DownlinkResult(th, jnp.tile(th[None], (n, 1)), bits), state
 
 
 @dataclass
-class MRCBroadcastDownlink:
+class MRCBroadcastDownlink(StatelessDownlink):
     """GR-Reconst downlink: one MRC re-transmission against the common prior;
     all clients share candidates and end with the same (noisy) estimate."""
 
@@ -320,7 +420,7 @@ class MRCBroadcastDownlink:
     logw_fn: Any = None
     broadcast_shareable: bool = True
 
-    def distribute(self, ctx, update, theta, theta_hat):
+    def step_down(self, ctx, state, update, theta, theta_hat):
         kt, plan, d = ctx.key, ctx.plan, ctx.d
         skey = jax.random.fold_in(kt, TAG_DL_SHARED)
         sel = jax.random.fold_in(kt, TAG_DL_SELECT_COMMON)
@@ -337,13 +437,12 @@ class MRCBroadcastDownlink:
                 logw_fn=self.logw_fn)
             est = from_blocks(est_b, d)
         bits = ctx.n_clients * self.n_samples * plan.n_blocks * math.log2(self.n_is)
-        return DownlinkResult(tgt, jnp.tile(clip01(est)[None], (ctx.n_clients, 1)), bits)
-
-    flush = staticmethod(_no_flush)
+        return DownlinkResult(
+            tgt, jnp.tile(clip01(est)[None], (ctx.n_clients, 1)), bits), state
 
 
 @dataclass
-class MRCPrivateDownlink:
+class MRCPrivateDownlink(StatelessDownlink):
     """PR downlink: per-client MRC against each client's own prior, vmapped
     over per-client private keys.  Under partial participation only the
     active cohort receives the downlink; stragglers keep stale estimates."""
@@ -354,7 +453,7 @@ class MRCPrivateDownlink:
     logw_fn: Any = None
     broadcast_shareable: bool = False
 
-    def distribute(self, ctx, update, theta, theta_hat):
+    def step_down(self, ctx, state, update, theta, theta_hat):
         kt, plan, d = ctx.key, ctx.plan, ctx.d
         ids = ctx.active_ids
         skeys = jax.vmap(lambda k: jax.random.fold_in(k, TAG_DL_SHARED))(
@@ -382,13 +481,11 @@ class MRCPrivateDownlink:
         est = jax.vmap(one)(skeys, sels, priors)
         theta_hat = theta_hat.at[ids].set(clip01(est))
         bits = ctx.n_active * self.n_samples * plan.n_blocks * math.log2(self.n_is)
-        return DownlinkResult(tgt, theta_hat, bits)
-
-    flush = staticmethod(_no_flush)
+        return DownlinkResult(tgt, theta_hat, bits), state
 
 
 @dataclass
-class SplitBlockDownlink:
+class SplitBlockDownlink(StatelessDownlink):
     """PR-SplitDL: each client receives MRC only for a disjoint 1/n of the
     blocks (downlink cost / n); the rest of its estimate stays as-is.
 
@@ -404,7 +501,7 @@ class SplitBlockDownlink:
     logw_fn: Any = None
     broadcast_shareable: bool = False
 
-    def distribute(self, ctx, update, theta, theta_hat):
+    def step_down(self, ctx, state, update, theta, theta_hat):
         kt, plan, d = ctx.key, ctx.plan, ctx.d
         if plan.adaptive:
             raise NotImplementedError("SplitDL is defined on fixed blocks")
@@ -437,9 +534,7 @@ class SplitBlockDownlink:
 
         theta_hat = jax.vmap(one)(skeys, sels, hb_all, own_pad)
         bits = n * self.n_samples * max_len * math.log2(self.n_is)
-        return DownlinkResult(update.theta, theta_hat, bits)
-
-    flush = staticmethod(_no_flush)
+        return DownlinkResult(update.theta, theta_hat, bits), state
 
 
 # ---------------------------------------------------------------------------
@@ -448,22 +543,25 @@ class SplitBlockDownlink:
 
 
 @dataclass
-class DenseChannel:
+class DenseChannel(StatelessUplink, StatelessDownlink):
     """Lossless 32-bit transmission; usable on either direction."""
 
     bits_per_value: float = FLOAT_BITS
     broadcast_shareable: bool = True
 
-    def transmit(self, ctx, payload, priors):
-        return payload, ctx.n_active * ctx.d * self.bits_per_value
+    def step_up(self, ctx, state, payload, priors):
+        return payload, ctx.n_active * ctx.d * self.bits_per_value, state
 
-    def distribute(self, ctx, update, theta, theta_hat):
+    def step_down(self, ctx, state, update, theta, theta_hat):
         th = update.theta
         return DownlinkResult(th, jnp.tile(th[None], (ctx.n_clients, 1)),
-                              ctx.n_clients * ctx.d * self.bits_per_value)
+                              ctx.n_clients * ctx.d * self.bits_per_value), state
+
+    def flush_step(self, state, n, d):
+        # Stateless: a periodic sync through a dense channel only costs bits.
+        return 0.0, n * d * self.bits_per_value, state
 
     def flush(self, n, d):
-        # Stateless: a periodic sync through a dense channel only costs bits.
         return 0.0, n * d * self.bits_per_value
 
 
@@ -487,35 +585,52 @@ class SignEFChannel:
             c = c + sign_compress(v - c)
         return c
 
-    def transmit(self, ctx, payload, priors):
+    # -- functional core --------------------------------------------------
+    def init_up_state(self, n, d):
+        return jnp.zeros((n, d), jnp.float32)
+
+    def init_down_state(self, n, d):
+        return jnp.zeros((d,), jnp.float32)
+
+    def step_up(self, ctx, e, payload, priors):
         if ctx.n_active != ctx.n_clients:
             raise ValueError("error-feedback uplinks require full participation")
-        if self._e is None:
-            self._e = jnp.zeros_like(payload)
-        acc = payload + self._e
+        acc = payload + e
         c = jax.vmap(self._compress)(acc)
-        self._e = acc - c
         bits = ctx.n_clients * self.passes * (ctx.d + FLOAT_BITS)
-        return c, bits
+        return c, bits, acc - c
 
-    def distribute(self, ctx, update, theta, theta_hat):
+    def step_down(self, ctx, e, update, theta, theta_hat):
         g = update.delta if update.delta is not None \
             else (theta - update.theta) / update.lr
-        if self._e is None:
-            self._e = jnp.zeros_like(g)
-        agg = g + self._e
+        agg = g + e
         c_s = self._compress(agg)
-        self._e = agg - c_s
         bits = ctx.n_clients * self.passes * (ctx.d + FLOAT_BITS)
         return DownlinkResult(theta - update.lr * c_s,
-                              theta_hat - update.lr * c_s[None, :], bits)
+                              theta_hat - update.lr * c_s[None, :], bits), agg - c_s
+
+    def flush_step(self, e, n, d):
+        r = jnp.mean(e, axis=0) if e.ndim == 2 else e
+        return r, n * d * FLOAT_BITS, jnp.zeros_like(e)
+
+    # -- object shell ------------------------------------------------------
+    def transmit(self, ctx, payload, priors):
+        if self._e is None:
+            self._e = jnp.zeros_like(payload)
+        out, bits, self._e = self.step_up(ctx, self._e, payload, priors)
+        return out, bits
+
+    def distribute(self, ctx, update, theta, theta_hat):
+        if self._e is None:
+            self._e = jnp.zeros_like(theta)
+        res, self._e = self.step_down(ctx, self._e, update, theta, theta_hat)
+        return res
 
     def flush(self, n, d):
         if self._e is None:
             return 0.0, n * d * FLOAT_BITS
-        r = jnp.mean(self._e, axis=0) if self._e.ndim == 2 else self._e
-        self._e = jnp.zeros_like(self._e)
-        return r, n * d * FLOAT_BITS
+        r, bits, self._e = self.flush_step(self._e, n, d)
+        return r, bits
 
     def reset(self):
         self._e = None
@@ -528,29 +643,39 @@ class TopKEFChannel:
     k: int = 1
     _e: Optional[jax.Array] = field(default=None, repr=False)
 
-    def transmit(self, ctx, payload, priors):
+    # -- functional core --------------------------------------------------
+    def init_up_state(self, n, d):
+        return jnp.zeros((n, d), jnp.float32)
+
+    def step_up(self, ctx, e, payload, priors):
         if ctx.n_active != ctx.n_clients:
             raise ValueError("error-feedback uplinks require full participation")
+        acc = payload + e
+        c = jax.vmap(lambda v: topk_compress(v, self.k))(acc)
+        return c, ctx.n_clients * topk_bits(ctx.d, self.k), acc - c
+
+    def flush_step(self, e, n, d):
+        return jnp.mean(e, axis=0), n * d * FLOAT_BITS, jnp.zeros_like(e)
+
+    # -- object shell ------------------------------------------------------
+    def transmit(self, ctx, payload, priors):
         if self._e is None:
             self._e = jnp.zeros_like(payload)
-        acc = payload + self._e
-        c = jax.vmap(lambda v: topk_compress(v, self.k))(acc)
-        self._e = acc - c
-        return c, ctx.n_clients * topk_bits(ctx.d, self.k)
+        out, bits, self._e = self.step_up(ctx, self._e, payload, priors)
+        return out, bits
 
     def flush(self, n, d):
         if self._e is None:
             return 0.0, n * d * FLOAT_BITS
-        r = jnp.mean(self._e, axis=0)
-        self._e = jnp.zeros_like(self._e)
-        return r, n * d * FLOAT_BITS
+        r, bits, self._e = self.flush_step(self._e, n, d)
+        return r, bits
 
     def reset(self):
         self._e = None
 
 
 @dataclass
-class SliceDownlink:
+class SliceDownlink(StatelessDownlink):
     """M3 downlink: each client receives a disjoint dense 1/n model slice;
     client estimates diverge (no broadcast saving possible).
 
@@ -560,7 +685,7 @@ class SliceDownlink:
     k: Optional[int] = None
     broadcast_shareable: bool = False
 
-    def distribute(self, ctx, update, theta, theta_hat):
+    def step_down(self, ctx, state, update, theta, theta_hat):
         n, d = ctx.n_clients, ctx.d
         th = update.theta
         k = self.k if self.k is not None else max(d // n, 1)
@@ -569,6 +694,5 @@ class SliceDownlink:
             lo = i * k
             hi = d if i == n - 1 else min((i + 1) * k, d)
             new_hat.append(theta_hat[i].at[lo:hi].set(th[lo:hi]))
-        return DownlinkResult(th, jnp.stack(new_hat), n * (d / n) * FLOAT_BITS)
-
-    flush = staticmethod(_no_flush)
+        return DownlinkResult(th, jnp.stack(new_hat),
+                              n * (d / n) * FLOAT_BITS), state

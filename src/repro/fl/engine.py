@@ -8,11 +8,32 @@ things every scheme shares and that used to be copy-pasted per loop:
 
 * shared-randomness key schedule (round key, per-client training keys),
 * partial participation (cohort sampling; inactive clients are *not*
-  trained -- the seed loops wastefully vmapped ``local_train`` over the full
-  cohort even when ``participation < 1``),
-* the host-side block-allocation control plane,
+  trained),
+* the block-allocation control plane,
 * periodic error-feedback synchronisation (CSER / LIEC style ``flush``),
 * BitMeter accounting and evaluation history.
+
+Two execution paths produce bit-for-bit identical results
+(tests/test_fused_parity.py):
+
+* **host** -- a Python round loop dispatching jitted sub-computations; the
+  only path for schemes whose block allocation is data-dependent
+  (AdaptiveAllocation / AdaptiveAvgAllocation recompute the plan from the
+  round's KL profile, which is host-side control plane).
+* **fused** -- the entire multi-round run is ONE ``jax.lax.scan`` over
+  rounds: channel state (error-feedback memories) is an explicit carry
+  pytree threaded through the pure ``step_up`` / ``step_down`` functions,
+  evaluation folds in via ``lax.cond`` on the eval schedule, and the EF
+  sync flush is a ``lax.cond`` branch.  Per-round *bits* are
+  data-independent (static shapes x static plan), so communication is
+  booked host-side after the scan with zero device round-trips -- the only
+  device->host transfer of a whole run is the stacked accuracy vector.
+
+Cohort sampling is precomputed as a (rounds, n_active) schedule.
+``cohort_rng="numpy"`` reproduces the seed's ``default_rng(seed+17)`` draws
+(bit-compatible with the legacy loops); ``cohort_rng="jax"`` derives the
+cohort from the round key (``fold_in(kt, TAG_COHORT)``), making the whole
+run a pure function of ``seed`` with no host RNG.
 
 The engine reproduces the seed loops bit-for-bit at full participation
 (tests/test_engine_parity.py); see DESIGN.md for the API contract.
@@ -29,7 +50,8 @@ import numpy as np
 from repro.core import mrc
 from repro.core.bernoulli import bern_kl, clip01
 from repro.core.bitmeter import BitMeter
-from .channels import BlockPlan, RoundContext, ServerUpdate, TAG_TRAIN
+from .channels import (BlockPlan, RoundContext, ServerUpdate, TAG_COHORT,
+                       TAG_TRAIN, pin)
 from .data import Dataset
 
 
@@ -52,7 +74,9 @@ class MeanDeltaAggregator:
     server_lr: float = 1.0
 
     def __call__(self, ctx, theta, up_out) -> ServerUpdate:
-        g = jnp.mean(up_out, axis=0)
+        # The mean feeds the server step; pinned so the fused engine cannot
+        # FMA-contract mean's scale into the subtraction (cf. channels.pin).
+        g = pin(getattr(ctx, "pin_token", None), jnp.mean(up_out, axis=0))
         return ServerUpdate(theta=theta - self.server_lr * g, delta=g,
                             lr=self.server_lr)
 
@@ -82,8 +106,63 @@ class FLEngine:
         self.task = task
         self.spec = spec
 
+    # -- fused-path eligibility -------------------------------------------
+
+    def fused_supported(self) -> bool:
+        """True when the whole run can compile to one scanned XLA program.
+
+        Requires (a) a round-independent block plan -- ``allocation`` is
+        None or declares ``static_plan`` (adaptive allocations recompute
+        the plan from each round's KL profile on the host), and (b) both
+        channels implementing the functional step protocol.
+        """
+        spec = self.spec
+        if spec.allocation is not None and \
+                not getattr(spec.allocation, "static_plan", False):
+            return False
+        up_ok = all(hasattr(spec.uplink, a)
+                    for a in ("step_up", "init_up_state", "flush_step"))
+        dn_ok = all(hasattr(spec.downlink, a)
+                    for a in ("step_down", "init_down_state", "flush_step"))
+        return up_ok and dn_ok
+
+    # -- cohort schedule ---------------------------------------------------
+
+    @staticmethod
+    def cohort_schedule(rounds: int, n: int, n_active: int, seed: int,
+                        cohort_rng: str = "numpy") -> np.ndarray:
+        """Precompute the (rounds, n_active) active-cohort table.
+
+        ``numpy`` consumes ``default_rng(seed+17)`` exactly as the seed
+        loops did (one sorted no-replacement draw per round, in round
+        order), so precomputing changes nothing.  ``jax`` derives each
+        round's cohort from the shared round key instead.
+        """
+        if cohort_rng not in ("numpy", "jax"):
+            raise ValueError(cohort_rng)
+        if n_active >= n:
+            return np.tile(np.arange(n, dtype=np.int64), (rounds, 1))
+        if cohort_rng == "numpy":
+            rng = np.random.default_rng(seed + 17)
+            return np.stack([np.sort(rng.choice(n, size=n_active, replace=False))
+                             for _ in range(rounds)])
+        base = jax.random.PRNGKey(seed)
+
+        def one(t):
+            kc = jax.random.fold_in(mrc.round_key(base, t), TAG_COHORT)
+            return jnp.sort(jax.random.choice(
+                kc, n, (n_active,), replace=False))
+
+        sched = jax.vmap(one)(jnp.arange(rounds))
+        return np.asarray(sched, dtype=np.int64)
+
+    # -- entry point -------------------------------------------------------
+
     def run(self, shards: Dataset, theta0: Optional[jax.Array] = None, *,
-            rounds: int, seed: int = 0, eval_every: int = 1) -> Dict[str, Any]:
+            rounds: int, seed: int = 0, eval_every: int = 1,
+            mode: str = "auto", cohort_rng: str = "numpy") -> Dict[str, Any]:
+        """Run the scheme.  ``mode``: "auto" (fused when eligible), "host",
+        or "fused" (raises for schemes needing the host control plane)."""
         task, spec = self.task, self.spec
         # Stateful channels (error-feedback memories) must start fresh: a
         # spec may be run more than once.
@@ -99,15 +178,36 @@ class FLEngine:
             n_clients=n, d=d,
             broadcast_downlink_shareable=getattr(
                 spec.downlink, "broadcast_shareable", True))
-        base = jax.random.PRNGKey(seed)
         n_active = max(1, int(round(spec.participation * n)))
-        rng = np.random.default_rng(seed + 17)
+        schedule = self.cohort_schedule(rounds, n, n_active, seed, cohort_rng)
+
+        if mode not in ("auto", "host", "fused"):
+            raise ValueError(mode)
+        fused_ok = self.fused_supported()
+        if mode == "fused" and not fused_ok:
+            raise ValueError(
+                f"spec {spec.name!r} needs the host control plane "
+                "(data-dependent block allocation or non-functional channels)")
+        runner = self._run_fused if (fused_ok and mode != "host") \
+            else self._run_host
+        out = runner(shards, theta, theta_hat, meter, rounds=rounds,
+                     seed=seed, eval_every=eval_every, schedule=schedule)
+        out["active_schedule"] = schedule
+        return out
+
+    # -- host loop ---------------------------------------------------------
+
+    def _run_host(self, shards, theta, theta_hat, meter, *, rounds, seed,
+                  eval_every, schedule) -> Dict[str, Any]:
+        task, spec = self.task, self.spec
+        n, d = meter.n_clients, meter.d
+        n_active = schedule.shape[1]
+        base = jax.random.PRNGKey(seed)
         history: List[Dict[str, float]] = []
 
         for t in range(rounds):
             kt = mrc.round_key(base, t)
-            active = np.sort(rng.choice(n, size=n_active, replace=False)) \
-                if n_active < n else np.arange(n)
+            active = schedule[t]
 
             # ---- local training: only the active cohort ------------------
             train_keys = jax.random.split(jax.random.fold_in(kt, TAG_TRAIN), n)
@@ -159,15 +259,135 @@ class FLEngine:
                                 "cum_bits": meter.total_bits,
                                 "bpp_so_far": meter.total_bpp})
 
+        return self._result(history, meter, theta, theta_hat)
+
+    # -- fused loop: the whole run is one lax.scan over rounds -------------
+
+    def _run_fused(self, shards, theta, theta_hat, meter, *, rounds, seed,
+                   eval_every, schedule) -> Dict[str, Any]:
+        task, spec = self.task, self.spec
+        n, d = meter.n_clients, meter.d
+        n_active = schedule.shape[1]
+        full = n_active == n
+        base = jax.random.PRNGKey(seed)
+
+        plan = None
+        if spec.allocation is not None:  # static: plan once for all rounds
+            size, n_blocks, seg_ids, overhead = spec.allocation.plan(None, d)
+            plan = BlockPlan(size=size, n_blocks=n_blocks, seg_ids=seg_ids,
+                             overhead_bits=overhead)
+
+        eval_mask = np.zeros(rounds, bool)
+        eval_mask[eval_every - 1::eval_every] = True
+        if rounds:
+            eval_mask[-1] = True
+        flush_mask = np.zeros(rounds, bool)
+        if spec.sync_period:
+            flush_mask[spec.sync_period - 1::spec.sync_period] = True
+
+        # Bits are data-independent, so the single trace of the scan body
+        # records the per-round (and per-flush) totals as plain floats.
+        booked: Dict[str, Any] = {}
+
+        # The host loop *materialises* each stage's output between separate
+        # dispatches; inside one fused graph XLA instead fuses values into
+        # their consumers, where LLVM FMA-contracts mul->sub chains into a
+        # single rounding and breaks bit-parity.  Every cross-stage value is
+        # therefore pinned through ``channels.pin`` (an integer-space
+        # round-trip on a traced zero); the speedup comes from removing
+        # per-round dispatch, not from cross-stage fusion.
+
+        def body(carry, xs):
+            theta, theta_hat, up_s, dn_s = carry
+            kt = mrc.round_key(base, xs["t"])
+            active = xs["active"]
+            pp = xs["pin"]  # traced int32 zero: the rounding pin token
+
+            train_keys = jax.random.split(jax.random.fold_in(kt, TAG_TRAIN), n)
+            if full:
+                priors, bx, by, keys = theta_hat, shards.x, shards.y, train_keys
+            else:
+                priors = theta_hat[active]
+                bx, by, keys = shards.x[active], shards.y[active], \
+                    train_keys[active]
+            payload = pin(pp, jax.vmap(task.local_train)(priors, bx, by, keys))
+
+            ctx = RoundContext(t=xs["t"], key=kt, n_clients=n, d=d,
+                               active=active, plan=plan, pin_token=pp)
+            up_out, ul_bits, up_s = spec.uplink.step_up(
+                ctx, up_s, payload, priors)
+            up_out, up_s = pin(pp, (up_out, up_s))
+            update = spec.aggregator(ctx, theta, up_out)
+            update = ServerUpdate(theta=pin(pp, update.theta),
+                                  delta=pin(pp, update.delta)
+                                  if update.delta is not None else None,
+                                  lr=update.lr)
+            res, dn_s = spec.downlink.step_down(
+                ctx, dn_s, update, theta, theta_hat)
+            theta, theta_hat, dn_s = pin(pp, (res.theta, res.theta_hat, dn_s))
+            booked["round"] = (ul_bits, res.bits)
+
+            if spec.sync_period:
+                def do_flush(op):
+                    th, thh, us, ds = op
+                    r_up, b_up, us = spec.uplink.flush_step(us, n, d)
+                    r_dn, b_dn, ds = spec.downlink.flush_step(ds, n, d)
+                    booked["flush"] = (b_up, b_dn)
+                    r_up, r_dn = pin(pp, (r_up, r_dn))  # residual means
+                    th = th - update.lr * (r_up + r_dn)
+                    return pin(pp, (th, jnp.tile(th[None], (n, 1)), us, ds))
+
+                theta, theta_hat, up_s, dn_s = jax.lax.cond(
+                    xs["flush"], do_flush, lambda op: op,
+                    (theta, theta_hat, up_s, dn_s))
+
+            acc = jax.lax.cond(
+                xs["eval"],
+                lambda th: jnp.asarray(task.evaluate(th), jnp.float32),
+                lambda th: jnp.full((), jnp.nan, jnp.float32), theta)
+            return (theta, theta_hat, up_s, dn_s), acc
+
+        carry0 = (theta, theta_hat,
+                  spec.uplink.init_up_state(n, d),
+                  spec.downlink.init_down_state(n, d))
+        xs = {"t": jnp.arange(rounds, dtype=jnp.int32),
+              "active": jnp.asarray(schedule),
+              "eval": jnp.asarray(eval_mask),
+              "flush": jnp.asarray(flush_mask),
+              "pin": jnp.zeros(rounds, jnp.int32)}
+        (theta, theta_hat, _, _), accs = jax.lax.scan(body, carry0, xs)
+
+        # ---- host-side communication booking (no device involvement) -----
+        ul_base, dl_base = booked["round"]
+        fl_up, fl_dn = booked.get("flush", (0.0, 0.0))
+        snaps = meter.book_run(
+            [ul_base + (fl_up if flush_mask[t] else 0.0)
+             for t in range(rounds)],
+            [dl_base + (fl_dn if flush_mask[t] else 0.0)
+             for t in range(rounds)],
+            overhead_bits=plan.overhead_bits * n if plan is not None else 0.0,
+            snapshot_mask=eval_mask)
+        accs = np.asarray(accs)  # the run's single device->host transfer
+        history: List[Dict[str, float]] = [
+            {"round": int(t) + 1, "acc": float(accs[t]),
+             "cum_bits": cum_bits, "bpp_so_far": bpp}
+            for t, (cum_bits, bpp) in zip(np.nonzero(eval_mask)[0], snaps)]
+        return self._result(history, meter, theta, theta_hat)
+
+    @staticmethod
+    def _result(history, meter, theta, theta_hat) -> Dict[str, Any]:
         return {"history": history, "meter": meter.summary(),
                 "theta": theta, "theta_hat": theta_hat,
                 "final_acc": history[-1]["acc"] if history else float("nan"),
-                "max_acc": max(h["acc"] for h in history) if history else float("nan")}
+                "max_acc": max(h["acc"] for h in history)
+                if history else float("nan")}
 
 
 def run_spec(task, spec: EngineSpec, shards: Dataset,
              theta0: Optional[jax.Array] = None, *, rounds: int,
-             seed: int = 0, eval_every: int = 1) -> Dict[str, Any]:
+             seed: int = 0, eval_every: int = 1, mode: str = "auto",
+             cohort_rng: str = "numpy") -> Dict[str, Any]:
     """Convenience one-shot: build an engine and run it."""
     return FLEngine(task, spec).run(shards, theta0, rounds=rounds, seed=seed,
-                                    eval_every=eval_every)
+                                    eval_every=eval_every, mode=mode,
+                                    cohort_rng=cohort_rng)

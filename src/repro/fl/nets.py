@@ -116,10 +116,32 @@ def cross_entropy(logits: jax.Array, y: jax.Array) -> jax.Array:
     return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
 
 
-def accuracy(apply_fn, weights, x, y, batch: int = 1000) -> float:
+def accuracy(apply_fn, weights, x, y, batch: int = 1000) -> jax.Array:
+    """Mean top-1 accuracy as a float32 scalar array.
+
+    Fully traceable (no host round-trips), so ``task.evaluate`` can run
+    under ``lax.cond`` inside the engine's fused round scan.  Large test
+    sets are processed in ``batch``-row chunks via ``lax.map`` so the
+    logits tensor never exceeds one chunk.
+    """
     n = x.shape[0]
-    correct = 0
-    for i in range(0, n, batch):
-        logits = apply_fn(weights, x[i : i + batch])
-        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i : i + batch]))
-    return correct / n
+    if n <= batch:
+        correct = jnp.sum(
+            (jnp.argmax(apply_fn(weights, x), -1) == y).astype(jnp.float32))
+        return correct * jnp.float32(1.0 / n)
+    nb = -(-n // batch)
+    pad = nb * batch - n
+    xp = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    yp = jnp.pad(y, (0, pad), constant_values=-1)  # -1 never equals an argmax
+
+    def chunk(i):
+        xi = jax.lax.dynamic_slice_in_dim(xp, i * batch, batch)
+        yi = jax.lax.dynamic_slice_in_dim(yp, i * batch, batch)
+        return jnp.sum(
+            (jnp.argmax(apply_fn(weights, xi), -1) == yi).astype(jnp.float32))
+
+    # Multiply by the reciprocal instead of dividing: XLA rewrites a
+    # divide-by-constant to a reciprocal multiply in *some* programs, so an
+    # explicit mul is the only form that rounds identically inside the
+    # engine's fused scan and in the standalone host-loop eval.
+    return jnp.sum(jax.lax.map(chunk, jnp.arange(nb))) * jnp.float32(1.0 / n)

@@ -138,3 +138,33 @@ def baseline_spec(scheme: str, *, n: int, d: int, server_lr: float = 1.0,
     if key not in BASELINE_BUILDERS:
         raise ValueError(scheme)
     return BASELINE_BUILDERS[key](n, d, server_lr, reset_period)
+
+
+def all_schemes(*, n: int, d: int, n_is: int = 16, block: int = 64,
+                n_dl: int = None, server_lr: float = 1.0,
+                reset_period: int = 50):
+    """Every named scheme as ``(name, task_kind, spec_factory)`` triples.
+
+    ``task_kind`` is "mask" (probabilistic-mask BiCompFL) or "delta"
+    (conventional-FL: the baselines and BiCompFL-CFL).  Factories build a
+    fresh spec per call -- EF channels carry state, so parity sweeps must
+    never share channel instances between runs.  Used by the fused-vs-host
+    parity suite and the round-throughput benchmark to enumerate the full
+    static-allocation scheme matrix.
+    """
+    ndl = n if n_dl is None else n_dl
+    out = []
+    for v in BICOMPFL_VARIANTS:
+        out.append((f"bicompfl-{v.lower()}", "mask",
+                    lambda v=v: bicompfl_spec(
+                        v, allocation=FixedAllocation(block), n_is=n_is,
+                        n_dl=ndl)))
+    out.append(("bicompfl-cfl", "delta",
+                lambda: cfl_spec(n_is=n_is, block_size=16,
+                                 server_lr=server_lr)))
+    for s in ALL_BASELINES:
+        out.append((s, "delta",
+                    lambda s=s: baseline_spec(s, n=n, d=d,
+                                              server_lr=server_lr,
+                                              reset_period=reset_period)))
+    return out

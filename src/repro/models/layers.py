@@ -234,16 +234,33 @@ def attention(cfg: ArchConfig, params, x: jax.Array, positions: jax.Array,
     return sharding.constraint(out, P(sharding.batch_axes(), None, None))
 
 
+# Symmetric int8 KV quantization is applied per group of KV_QUANT_GROUP
+# channels (not per full head vector): one outlier channel then only costs
+# its own group's resolution.  Scales are stored f16 -- the 2-byte scale per
+# 16 int8 payload bytes keeps the cache at 0.5625x of the bf16 footprint.
+KV_QUANT_GROUP = 16
+
+
+def _kv_groups(dh: int) -> int:
+    return KV_QUANT_GROUP if dh % KV_QUANT_GROUP == 0 else dh
+
+
 def quantize_kv(t: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Per-(batch, pos, head) symmetric int8 quantization of (B,S,Hkv,Dh)."""
-    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
-    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
-                 -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
+    """Group-wise symmetric int8 quantization of (B,S,Hkv,Dh).
+
+    Returns (int8 payload (B,S,Hkv,Dh), f16 scales (B,S,Hkv,Dh/G))."""
+    g = _kv_groups(t.shape[-1])
+    tg = t.astype(jnp.float32).reshape(t.shape[:-1] + (-1, g))
+    scale = jnp.max(jnp.abs(tg), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(tg / scale[..., None]), -127, 127)
+    return q.reshape(t.shape).astype(jnp.int8), scale.astype(jnp.float16)
 
 
 def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale[..., None]
+    g = _kv_groups(q.shape[-1])
+    qg = q.astype(jnp.float32).reshape(q.shape[:-1] + (-1, g))
+    out = qg * scale.astype(jnp.float32)[..., None]
+    return out.reshape(q.shape)
 
 
 def decode_attention(cfg: ArchConfig, params, x: jax.Array, pos: jax.Array,
@@ -253,7 +270,8 @@ def decode_attention(cfg: ArchConfig, params, x: jax.Array, pos: jax.Array,
     x: (B, 1, d); pos: scalar int (current absolute position, == valid len).
     kv_cache: (k, v) each (B, S_max, Hkv, Dh) -- or, with
     cfg.kv_cache_quant, (k_i8, v_i8, k_scale, v_scale) with int8 payloads
-    and (B, S_max, Hkv) f32 scales (halves the cache's HBM footprint).
+    and (B, S_max, Hkv, Dh/KV_QUANT_GROUP) f16 group scales (0.5625x of
+    the bf16 cache footprint).
     Positions >= pos are masked.  For sliding-window configs the cache may
     hold only the window (S_max == window), written at ``pos % S_max``
     (ring buffer).
@@ -292,6 +310,12 @@ def decode_attention(cfg: ArchConfig, params, x: jax.Array, pos: jax.Array,
         cv_s = jax.lax.dynamic_update_slice_in_dim(cv_s, vs, slot, axis=1)
         kk_full = dequantize_kv(ck, ck_s)
         vv_full = dequantize_kv(cv, cv_s)
+        # The current token's K/V are still at hand in full precision; only
+        # *past* positions pay the int8 round trip.
+        kk_full = jax.lax.dynamic_update_slice_in_dim(
+            kk_full, k.astype(jnp.float32), slot, axis=1)
+        vv_full = jax.lax.dynamic_update_slice_in_dim(
+            vv_full, v.astype(jnp.float32), slot, axis=1)
     else:
         ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
         cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)

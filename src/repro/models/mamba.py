@@ -126,7 +126,10 @@ def decode_step(cfg: ArchConfig, params, x: jax.Array, state: MambaState):
     xi, z = jnp.split(xz, 2, axis=-1)                             # (B, di)
 
     window = jnp.concatenate([state.conv.astype(xi.dtype), xi[:, None]], axis=1)  # (B, dc, di)
-    conv = jnp.einsum("bcd,cd->bd", window, params["conv_w"])
+    # Same multiply-add order as mamba_block's sliced sum: the full-sequence
+    # and decode paths must agree bitwise, or downstream top-k MoE routing
+    # amplifies the rounding gap into different expert choices.
+    conv = sum(window[:, i] * params["conv_w"][i] for i in range(dc))
     xc = jax.nn.silu(conv + params["conv_b"])
 
     dt, bb, cc = _selective(cfg, params, xc)

@@ -69,7 +69,25 @@ def init_moe(key: jax.Array, cfg: ArchConfig):
     return params, specs
 
 
+# Below this group size the dispatch tensor is cheap enough to give every
+# token a guaranteed slot (capacity == group): no token is ever dropped.
+# Dropless routing is what makes single-token decode consistent with the
+# teacher-forced forward pass -- with finite capacity, a token's expert
+# assignment depends on which *other* tokens share its group, so decode
+# (groups of B tokens) and prefill (groups of B*S) drop differently.
+# Scope: decode groups (the serving batch) are essentially always under the
+# threshold, so *decode is always dropless*; the decode==forward guarantee
+# therefore holds when the teacher-forced pass also stays within one
+# dropless group (B*S <= 256, the smoke/consistency-test regime).  Larger
+# training prefills keep GShard capacity on purpose -- a 1024-token group
+# with capacity==group would make the (G, E, C) dispatch tensor quadratic
+# in G, and training-time drops are a standard throughput tradeoff.
+DROPLESS_MAX_GROUP = 256
+
+
 def _capacity(cfg: ArchConfig, group: int) -> int:
+    if group <= DROPLESS_MAX_GROUP:
+        return group
     c = int(group * cfg.top_k / cfg.n_experts * cfg.capacity_factor) + 1
     return max(c, cfg.top_k)
 

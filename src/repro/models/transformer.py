@@ -375,9 +375,10 @@ def init_cache_entry(cfg: ArchConfig, plan, batch: int, s_max: int):
         s_alloc = min(s_max, cfg.sliding_window) if cfg.sliding_window else s_max
         shape = (batch, s_alloc, cfg.n_kv_heads, cfg.head_dim)
         if cfg.kv_cache_quant:
-            sshape = shape[:-1]
+            from .layers import _kv_groups
+            sshape = shape[:-1] + (cfg.head_dim // _kv_groups(cfg.head_dim),)
             return (jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
-                    jnp.zeros(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32))
+                    jnp.zeros(sshape, jnp.float16), jnp.zeros(sshape, jnp.float16))
         return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
     if mixer == "mamba":
         return mamba_mod.init_mamba_state(cfg, batch, dt)
@@ -405,7 +406,7 @@ def cache_entry_spec(cfg: ArchConfig, plan, *, batch: int = 0):
         hs = kv_head_spec(cfg, sharding.axis_size("model"), for_cache=True)
         sp = P(bspec, "data" if seq_parallel else None, *hs)
         if cfg.kv_cache_quant:
-            ssp = P(bspec, "data" if seq_parallel else None, hs[0])
+            ssp = P(bspec, "data" if seq_parallel else None, hs[0], None)
             return (sp, sp, ssp, ssp)
         return (sp, sp)
     if mixer == "mamba":

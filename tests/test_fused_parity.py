@@ -1,0 +1,124 @@
+"""Fused-vs-host engine parity: the device-resident ``lax.scan`` path must
+reproduce the host round loop **bit-for-bit** -- identical histories
+(accuracy floats, cumulative bits), meters, and final ``theta`` /
+``theta_hat`` arrays, exact equality with no tolerances.
+
+Covers every registry scheme with a static block plan (all four BiCompFL
+variants, BiCompFL-CFL, the seven baselines incl. the CSER/LIEC flush
+path), full and partial participation, both cohort RNGs, and non-unit eval
+cadence.  Schemes needing the host control plane (adaptive allocation) must
+refuse ``mode="fused"`` and silently fall back under ``mode="auto"``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.blocks import AdaptiveAllocation, FixedAllocation
+from repro.fl import registry
+from repro.fl.data import make_synthetic, partition_iid
+from repro.fl.engine import FLEngine
+from repro.fl.nets import make_mlp
+from repro.fl.tasks import make_cfl_task, make_mask_task
+
+SCHEMES = registry.all_schemes(n=3, d=1472, n_is=16, block=64, reset_period=2)
+
+
+@pytest.fixture(scope="module")
+def mask_setup():
+    k = jax.random.PRNGKey(3)
+    train, test = make_synthetic(k, n_train=240, n_test=120, hw=6, noise=0.5)
+    shards = partition_iid(jax.random.fold_in(k, 1), train, 3, 80)
+    net = make_mlp(in_dim=36, widths=(32,), signed_constant=True)
+    task = make_mask_task(net, jax.random.fold_in(k, 2), test.x, test.y,
+                          local_epochs=1, batch_size=40)
+    return task, shards
+
+
+@pytest.fixture(scope="module")
+def cfl_setup():
+    k = jax.random.PRNGKey(4)
+    train, test = make_synthetic(k, n_train=240, n_test=120, hw=6, noise=0.5)
+    shards = partition_iid(jax.random.fold_in(k, 1), train, 3, 80)
+    net = make_mlp(in_dim=36, widths=(32,))
+    task, theta0 = make_cfl_task(net, jax.random.fold_in(k, 2), test.x, test.y,
+                                 local_epochs=2, batch_size=40, local_lr=3e-3)
+    assert int(theta0.shape[0]) == 1472  # keep SCHEMES' d in sync
+    return task, theta0, shards
+
+
+def _assert_identical(host, fused):
+    assert len(host["history"]) == len(fused["history"])
+    for hh, hf in zip(host["history"], fused["history"]):
+        for key in hh:
+            assert hf[key] == hh[key], (key, hh, hf)
+    for key in host["meter"]:
+        assert fused["meter"][key] == host["meter"][key], key
+    np.testing.assert_array_equal(np.asarray(host["theta"]),
+                                  np.asarray(fused["theta"]))
+    np.testing.assert_array_equal(np.asarray(host["theta_hat"]),
+                                  np.asarray(fused["theta_hat"]))
+    np.testing.assert_array_equal(host["active_schedule"],
+                                  fused["active_schedule"])
+    assert fused["final_acc"] == host["final_acc"]
+    assert fused["max_acc"] == host["max_acc"]
+
+
+def _run_both(task, spec_factory, shards, theta0=None, *, rounds=3, seed=11,
+              **kw):
+    host = FLEngine(task, spec_factory()).run(
+        shards, theta0, rounds=rounds, seed=seed, mode="host", **kw)
+    fused = FLEngine(task, spec_factory()).run(
+        shards, theta0, rounds=rounds, seed=seed, mode="fused", **kw)
+    _assert_identical(host, fused)
+    return host
+
+
+@pytest.mark.parametrize("name,kind,factory", SCHEMES,
+                         ids=[s[0] for s in SCHEMES])
+def test_fused_matches_host(mask_setup, cfl_setup, name, kind, factory):
+    if kind == "mask":
+        task, shards = mask_setup
+        _run_both(task, factory, shards)
+    else:
+        task, theta0, shards = cfl_setup
+        # reset_period=2 inside 3 rounds exercises the lax.cond flush branch
+        _run_both(task, factory, shards, theta0)
+
+
+@pytest.mark.parametrize("cohort_rng", ["numpy", "jax"])
+def test_fused_partial_participation(mask_setup, cohort_rng):
+    task, shards = mask_setup
+    factory = lambda: registry.bicompfl_spec(
+        "PR", allocation=FixedAllocation(64), n_is=16, n_dl=3,
+        participation=0.67)
+    out = _run_both(task, factory, shards, rounds=3, cohort_rng=cohort_rng)
+    assert out["active_schedule"].shape == (3, 2)  # 0.67 of 3 -> 2 active
+
+
+def test_fused_eval_cadence(mask_setup):
+    """lax.cond-gated eval: only scheduled rounds (plus the last) appear."""
+    task, shards = mask_setup
+    factory = lambda: registry.bicompfl_spec(
+        "GR", allocation=FixedAllocation(64), n_is=16, n_dl=3)
+    out = _run_both(task, factory, shards, rounds=3, eval_every=2)
+    assert [h["round"] for h in out["history"]] == [2, 3]
+
+
+def test_adaptive_allocation_falls_back_to_host(mask_setup):
+    task, shards = mask_setup
+    spec = registry.bicompfl_spec("GR", allocation=AdaptiveAllocation(n_is=16),
+                                  n_is=16, n_dl=3)
+    engine = FLEngine(task, spec)
+    assert not engine.fused_supported()
+    with pytest.raises(ValueError):
+        engine.run(shards, rounds=2, seed=1, mode="fused")
+    auto = engine.run(shards, rounds=2, seed=11, mode="auto")
+    host = engine.run(shards, rounds=2, seed=11, mode="host")
+    _assert_identical(host, auto)
+
+
+def test_fixed_allocation_auto_uses_fused(mask_setup):
+    task, shards = mask_setup
+    engine = FLEngine(task, registry.bicompfl_spec(
+        "GR", allocation=FixedAllocation(64), n_is=16, n_dl=3))
+    assert engine.fused_supported()

@@ -24,6 +24,16 @@ def test_quantize_roundtrip_error_bounded():
 
 
 def test_decode_matches_unquantized_argmax():
+    """Greedy decode survives int8 KV wherever the decision is decisive.
+
+    int8 perturbs the logits by a bounded noise; argmax invariance is only
+    a meaningful guarantee for sequences whose winning margin exceeds that
+    noise (with random-init weights the top-2 gap can be ~1e-2, below what
+    ANY 8-bit cache could preserve).  So: quantized logits must stay close
+    everywhere, and the greedy choice must match for every sequence whose
+    unquantized top-2 margin exceeds twice the observed noise -- and the
+    test must contain at least one such decisive sequence to bite.
+    """
     cfg = C.get("qwen3-1.7b").reduced()
     cfg_q = dataclasses.replace(cfg, kv_cache_quant=True)
     model = T.build(cfg)
@@ -39,12 +49,17 @@ def test_decode_matches_unquantized_argmax():
                                  jnp.int32(t))
         lq, cache_q = T.serve_step(model_q, params, cache_q, toks[:, t:t + 1],
                                    jnp.int32(t))
-    a = np.asarray(jnp.argmax(lg[:, 0].astype(jnp.float32), -1))
-    aq = np.asarray(jnp.argmax(lq[:, 0].astype(jnp.float32), -1))
-    np.testing.assert_array_equal(a, aq)   # greedy choice survives int8
-    # and the logits stay close
-    np.testing.assert_allclose(np.asarray(lq, np.float32),
-                               np.asarray(lg, np.float32), rtol=0.1, atol=0.15)
+    lg32 = np.asarray(lg[:, 0], np.float32)
+    lq32 = np.asarray(lq[:, 0], np.float32)
+    # group-16 scales + full-precision current token keep the logits close
+    np.testing.assert_allclose(lq32, lg32, rtol=0.05, atol=0.06)
+    err = np.abs(lq32 - lg32).max()
+    top2 = np.sort(lg32, -1)
+    decisive = (top2[:, -1] - top2[:, -2]) > 2 * err
+    assert decisive.any(), "no decisive sequence -- test would be vacuous"
+    a = lg32.argmax(-1)
+    aq = lq32.argmax(-1)
+    np.testing.assert_array_equal(a[decisive], aq[decisive])
 
 
 def test_cache_footprint_halved():
