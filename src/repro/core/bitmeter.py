@@ -39,21 +39,27 @@ class BitMeter:
             "cum_bits": self.uplink_bits + self.downlink_bits,
         })
 
-    def book_run(self, uplink_bits, downlink_bits, overhead_bits: float = 0.0,
+    def book_run(self, uplink_bits, downlink_bits, overhead_bits=0.0,
                  snapshot_mask=None):
         """Book a whole run's rounds in one call (per-round total sequences).
 
-        Used after a fused (device-resident) execution: per-round bit
-        totals are data-independent, so they never live on the device and
-        the meter replays them host-side with the same per-round float
-        arithmetic as the host loop.  Returns the ``(total_bits,
-        total_bpp)`` snapshot after each round where ``snapshot_mask`` is
-        True (every round when None) -- the values the engine's history
-        entries record at evaluation rounds.
+        Used after a fused (device-resident) execution.  With a static
+        block plan the per-round bit totals are data-independent Python
+        floats and the meter replays them host-side with the same per-round
+        float arithmetic as the host loop; with a bucketed adaptive plan
+        the engine hands over the traced per-round bits vectors that came
+        out of the scan.  ``overhead_bits`` is either one per-round scalar
+        or a per-round sequence (the adaptive side-information varies with
+        the round's plan).  Returns the ``(total_bits, total_bpp)``
+        snapshot after each round where ``snapshot_mask`` is True (every
+        round when None) -- the values the engine's history entries record
+        at evaluation rounds.
         """
+        per_round_overhead = hasattr(overhead_bits, "__len__")
         snaps = []
         for t, (u, dl) in enumerate(zip(uplink_bits, downlink_bits)):
-            self.add_round(u, dl, overhead_bits=overhead_bits)
+            oh = overhead_bits[t] if per_round_overhead else overhead_bits
+            self.add_round(float(u), float(dl), overhead_bits=float(oh))
             if snapshot_mask is None or snapshot_mask[t]:
                 snaps.append((self.total_bits, self.total_bpp))
         return snaps

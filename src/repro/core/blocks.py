@@ -11,13 +11,36 @@
 To keep JIT shapes static, adaptive sizes are quantized to powers of two in
 [min_block, max_block]; AdaptiveAllocation represents boundaries through a
 segment-id vector with a static maximum number of segments.
+
+Bucketed device-resident planning
+---------------------------------
+The host control plane (``plan``) recomputes exact block boundaries each
+round from that round's KL profile -- data-dependent shapes, so the fused
+``lax.scan`` engine cannot compile it.  The bucket API is the traceable
+counterpart: every adaptive allocation additionally exposes
+
+* ``bucket_plans(d)``  -- a small *static* set of precompiled
+  :class:`BlockPlan` templates (one ``lax.switch`` branch each);
+* ``select_bucket(stats, d)``  -- pure-jnp selection of the branch index
+  from the round's on-device KL statistics (traced int32);
+* ``finalize_plan(template, stats, d)`` -- fills the selected template's
+  data-dependent pieces (traced segment ids, traced billable block count)
+  without changing any shape.
+
+``AdaptiveAvgAllocation``'s bucket set is exactly its pow2 size grid, so
+bucketing loses nothing (the exact plan *is* a bucket).  For
+``AdaptiveAllocation`` the requested block count is rounded **down** onto a
+geometric grid -- conservative by construction: the bucketed plan never
+books more bits than the exact plan's budget plus the allocation's declared
+``bucket_overhead_bits`` (tests/test_allocation.py pins both properties).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional
+from typing import Any, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from .bernoulli import bern_kl
@@ -25,6 +48,37 @@ from .bernoulli import bern_kl
 
 def _pad_to(d: int, block: int) -> int:
     return -(-d // block) * block
+
+
+@dataclass(frozen=True)
+class BlockPlan:
+    """One round's block-allocation decision.
+
+    Host control plane: ``seg_ids`` is a numpy array and ``overhead_bits`` /
+    ``billable_blocks`` are Python numbers.  Fused control plane: the plan is
+    built inside the scanned round body, so ``seg_ids``, ``overhead_bits``
+    and ``billable_blocks`` may be *traced* values -- only ``size`` and
+    ``n_blocks`` (which fix device shapes) must stay static.
+    """
+
+    size: Optional[int]            # fixed block size (None for segment codec)
+    n_blocks: int                  # static segment capacity (shapes)
+    seg_ids: Any                   # per-parameter segment ids (adaptive only)
+    overhead_bits: Any             # side information per client (may be traced)
+    billable_blocks: Any = None    # actually-transmitted blocks (may be traced)
+
+    @property
+    def adaptive(self) -> bool:
+        return self.seg_ids is not None
+
+    @property
+    def billable(self):
+        """Blocks that cross the wire: ``n_blocks`` unless the (traced)
+        actual segment count says fewer.  Channels must bill this, not
+        ``n_blocks`` -- it is what makes channel bits traced values under
+        bucketed adaptive plans."""
+        return self.n_blocks if self.billable_blocks is None \
+            else self.billable_blocks
 
 
 @dataclass
@@ -59,7 +113,9 @@ class AdaptiveAvgAllocation:
 
     name = "Adaptive-Avg"
     needs_kl = True
-    static_plan = False  # per-round size retuning is host control plane
+    static_plan = False       # per-round size retuning ...
+    needs_profile = False     # ... but only the *mean* KL is consumed
+    bucket_overhead_bits = 0.0  # buckets == the exact pow2 plan space
 
     def plan(self, kl_per_param: Optional[np.ndarray], d: int):
         if kl_per_param is None:
@@ -73,6 +129,34 @@ class AdaptiveAvgAllocation:
         n_blocks = _pad_to(d, size) // size
         return size, n_blocks, None, math.ceil(math.log2(self.max_block))
 
+    # -- bucketed (fused) control plane -----------------------------------
+
+    def bucket_sizes(self) -> Tuple[int, ...]:
+        lo = int(math.log2(self.min_block))
+        hi = int(math.log2(self.max_block))
+        return tuple(2 ** k for k in range(lo, hi + 1))
+
+    def bucket_plans(self, d: int):
+        overhead = float(math.ceil(math.log2(self.max_block)))
+        return [BlockPlan(size=s, n_blocks=_pad_to(d, s) // s, seg_ids=None,
+                          overhead_bits=overhead)
+                for s in self.bucket_sizes()]
+
+    def select_bucket(self, stats, d: int):
+        """Traced bucket index from the on-device mean KL; mirrors ``plan``
+        (same target / pow2 rounding), so the selected bucket *is* the exact
+        plan up to f32-vs-f64 rounding of the mean."""
+        mean_kl = stats["total"] / d + 1e-12
+        target = self.target_ratio * math.log(self.n_is)
+        size = jnp.maximum(target / mean_kl, 1.0)
+        lo = math.log2(self.min_block)
+        hi = math.log2(self.max_block)
+        k = jnp.clip(jnp.round(jnp.log2(size)), lo, hi)
+        return (k - lo).astype(jnp.int32)
+
+    def finalize_plan(self, template: BlockPlan, stats, d: int) -> BlockPlan:
+        return template  # nothing data-dependent beyond the size choice
+
 
 @dataclass
 class AdaptiveAllocation:
@@ -81,16 +165,27 @@ class AdaptiveAllocation:
     Number of blocks B is chosen so that total KL / B ~ log(n_is); boundaries
     are found by cumulative-KL binning. Overhead: B * ceil(log2(max_block))
     bits to transmit the block intervals (paper, Appendix E).
+
+    ``buckets`` (optional) pins the fused path's block-count grid; by
+    default a geometric ratio-2 grid from ``min_blocks`` up to the cap
+    ``max(min_blocks, d // 8)`` is used.  The requested count rounds *down*
+    onto the grid (conservative: never more bits than the exact plan).
     """
 
     n_is: int = 256
     target_ratio: float = 1.0
     min_blocks: int = 4
     max_block: int = 4096
+    buckets: Optional[Tuple[int, ...]] = None
 
     name = "Adaptive"
     needs_kl = True
-    static_plan = False  # per-round KL binning is host control plane
+    static_plan = False
+    needs_profile = True      # cumulative-KL binning needs the full profile
+    bucket_overhead_bits = 0.0  # floor-rounding can only shrink the budget
+
+    def _cap(self, d: int) -> int:
+        return max(self.min_blocks, d // 8)
 
     def plan(self, kl_per_param: Optional[np.ndarray], d: int):
         if kl_per_param is None:
@@ -102,15 +197,71 @@ class AdaptiveAllocation:
         total = float(np.sum(kl_per_param)) + 1e-12
         target = self.target_ratio * math.log(self.n_is)
         n_blocks = max(self.min_blocks, int(math.ceil(total / target)))
-        n_blocks = min(n_blocks, max(self.min_blocks, d // 8))
+        n_blocks = min(n_blocks, self._cap(d))
         cum = np.cumsum(np.asarray(kl_per_param, dtype=np.float64))
         # boundary so each block holds ~ total/n_blocks KL mass
         edges = np.searchsorted(cum, np.linspace(0, total, n_blocks + 1)[1:-1])
         seg = np.zeros(d, dtype=np.int32)
         seg[edges] += 1
         seg = np.cumsum(seg).astype(np.int32)
-        overhead = n_blocks * math.ceil(math.log2(self.max_block))
+        overhead = (int(seg.max()) + 1) * math.ceil(math.log2(self.max_block))
         return None, int(seg.max()) + 1, seg, float(overhead)
+
+    # -- bucketed (fused) control plane -----------------------------------
+
+    def bucket_grid(self, d: int) -> Tuple[int, ...]:
+        """Block-count grid; always contains ``min_blocks`` so the floor
+        rounding in ``select_bucket`` has a conservative anchor -- without
+        it, an explicit ``buckets=`` set starting above the exact count
+        would silently round *up* and out-bill the exact plan."""
+        cap = self._cap(d)
+        if self.buckets is not None:
+            grid = sorted({int(np.clip(b, self.min_blocks, cap))
+                           for b in self.buckets} | {self.min_blocks})
+            return tuple(grid)
+        grid = []
+        b = self.min_blocks
+        while b < cap:
+            grid.append(b)
+            b *= 2
+        grid.append(cap)
+        return tuple(grid)
+
+    def bucket_plans(self, d: int):
+        overhead = float(math.ceil(math.log2(self.max_block)))
+        return [BlockPlan(size=None, n_blocks=nb, seg_ids=None,
+                          overhead_bits=nb * overhead)
+                for nb in self.bucket_grid(d)]
+
+    def select_bucket(self, stats, d: int):
+        """Traced index of the largest bucket <= the exact block count."""
+        total = stats["total"] + 1e-12
+        target = self.target_ratio * math.log(self.n_is)
+        nb = jnp.clip(jnp.ceil(total / target), self.min_blocks, self._cap(d))
+        grid = jnp.asarray(self.bucket_grid(d), jnp.float32)
+        idx = jnp.searchsorted(grid, nb.astype(jnp.float32), side="right") - 1
+        return jnp.clip(idx, 0, grid.shape[0] - 1).astype(jnp.int32)
+
+    def finalize_plan(self, template: BlockPlan, stats, d: int) -> BlockPlan:
+        """Equal-KL-mass binning into the bucket's (static) block count.
+
+        Mirrors ``plan`` with jnp in place of numpy: duplicate bin edges
+        collapse (``.at[edges].set(1)`` == numpy's buffered fancy ``+= 1``),
+        so the traced actual segment count ``seg[-1] + 1`` -- what crosses
+        the wire and what the channels bill -- can be below the template's
+        static capacity, exactly like the host plan's ``seg.max() + 1``.
+        """
+        klp = stats["profile"]
+        nb = template.n_blocks
+        cum = jnp.cumsum(klp)
+        total = cum[-1] + 1e-12
+        targets = total * jnp.arange(1, nb, dtype=jnp.float32) / nb
+        edges = jnp.clip(jnp.searchsorted(cum, targets), 0, d - 1)
+        seg = jnp.cumsum(jnp.zeros(d, jnp.int32).at[edges].set(1))
+        billable = seg[-1] + 1
+        overhead = billable * math.ceil(math.log2(self.max_block))
+        return BlockPlan(size=None, n_blocks=nb, seg_ids=seg,
+                         overhead_bits=overhead, billable_blocks=billable)
 
 
 def kl_per_param(q, p) -> np.ndarray:

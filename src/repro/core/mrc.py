@@ -216,17 +216,29 @@ def encode_segments(
     n_is: int,
     n_seg: int,
 ) -> MRCResult:
-    """MRC over variable blocks given per-parameter segment ids (d,)."""
-    d = q.shape[0]
-    u = _segment_candidates(shared_key, n_is, d)          # (n_is, d)
-    x = (u < clip01(p)[None, :]).astype(jnp.float32)       # (n_is, d)
-    a, b = log_ratio_coeffs(q, p)                          # (d,), (d,)
-    contrib = x * a[None, :] + b[None, :]                  # (n_is, d)
-    logw = jax.vmap(lambda row: jax.ops.segment_sum(row, seg_ids, num_segments=n_seg))(contrib)
+    """MRC over variable blocks given per-parameter segment ids (d,).
+
+    The importance weights decompose as  logW(i, s) = sum_{e in s} x_ie*a_e
+    + sum_{e in s} b_e : the prior term is candidate-independent, so it is
+    segment-summed once ((d,) -> (n_seg,)) instead of being broadcast into
+    an (n_is, d) add, and the candidate term streams through one fused
+    compare+select pass over the uniforms (``where(u < p, a, 0)`` -- exact:
+    x is {0, 1} and a is finite after clipping).  The selected sample is
+    re-thresholded from the chosen candidate *row* only, never from a
+    materialised (n_is, d) sample tensor.  This is the fused adaptive
+    path's per-round hot loop (every client, every sample).
+    """
+    pc = clip01(p)
+    u = _segment_candidates(shared_key, n_is, d := q.shape[0])  # (n_is, d)
+    a, b = log_ratio_coeffs(q, p)                               # (d,), (d,)
+    xa = jnp.where(u < pc[None, :], a[None, :], 0.0)            # (n_is, d)
+    seg_sum = lambda row: jax.ops.segment_sum(row, seg_ids, num_segments=n_seg)
+    logw = jax.vmap(seg_sum)(xa) + seg_sum(b)[None, :]          # (n_is, n_seg)
     gu = jax.random.uniform(select_key, (n_is, n_seg))
     gumbel = -jnp.log(-jnp.log(jnp.clip(gu, 1e-12, 1.0 - 1e-12)))
-    idx = jnp.argmax(logw + gumbel, axis=0).astype(jnp.int32)  # (n_seg,)
-    chosen = jnp.take_along_axis(x, idx[seg_ids][None, :], axis=0)[0]  # (d,)
+    idx = jnp.argmax(logw + gumbel, axis=0).astype(jnp.int32)   # (n_seg,)
+    u_sel = jnp.take_along_axis(u, idx[seg_ids][None, :], axis=0)[0]  # (d,)
+    chosen = (u_sel < pc).astype(jnp.float32)
     return MRCResult(indices=idx, sample=chosen)
 
 
@@ -236,8 +248,8 @@ def decode_segments(
 ) -> jax.Array:
     d = p.shape[0]
     u = _segment_candidates(shared_key, n_is, d)
-    x = (u < clip01(p)[None, :]).astype(jnp.float32)
-    return jnp.take_along_axis(x, indices[seg_ids][None, :], axis=0)[0]
+    u_sel = jnp.take_along_axis(u, indices[seg_ids][None, :], axis=0)[0]
+    return (u_sel < clip01(p)).astype(jnp.float32)
 
 
 def transmit_segments(

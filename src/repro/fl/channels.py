@@ -34,10 +34,20 @@ State is any pytree: ``()`` for stateless channels, the error-feedback
 memory array for the EF compressors.  ``init_up_state(n, d)`` /
 ``init_down_state(n, d)`` build the initial state;
 ``flush_step(state, n, d) -> (residual, bits, state)`` implements the
-periodic error-reset of CSER / LIEC.  **Bits are data-independent**: every
-``bits`` return value is a plain Python float computed from static shapes
-and the round's :class:`BlockPlan`, never a traced array -- which is what
-lets the fused engine book communication host-side with zero device syncs.
+periodic error-reset of CSER / LIEC.
+
+Bits contract
+-------------
+``bits`` return values are computed from static shapes and the round's
+:class:`BlockPlan`.  Under a *static* plan that makes them plain Python
+floats, which lets the fused engine book communication host-side with zero
+device syncs.  Under a bucketed adaptive plan (built on device inside the
+fused scan body) ``plan.billable`` is a **traced** block count, so ``bits``
+becomes a traced f32 scalar; the engine then carries per-round bits through
+the scan outputs and books them into the BitMeter after the run.  Channels
+must always bill ``plan.billable`` (never ``plan.n_blocks``, which is only
+the static segment *capacity*) and must keep the bits expression otherwise
+shape-derived, so both representations stay exact.
 
 Object shell
 ------------
@@ -62,6 +72,8 @@ import numpy as np
 
 from repro.core import mrc
 from repro.core.bernoulli import clip01
+from repro.core.blocks import BlockPlan  # noqa: F401  (re-export: the plan
+                                         # travels with the channel API)
 from repro.core.quantizers import (FLOAT_BITS, sign_compress, topk_bits,
                                    topk_compress)
 
@@ -143,20 +155,6 @@ def from_blocks(m: jax.Array, d: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 # Round context / server update.
 # ---------------------------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class BlockPlan:
-    """One round's block-allocation decision (host-side control plane)."""
-
-    size: Optional[int]            # fixed block size (None for segment codec)
-    n_blocks: int
-    seg_ids: Optional[np.ndarray]  # per-parameter segment ids (adaptive only)
-    overhead_bits: float           # side information per client
-
-    @property
-    def adaptive(self) -> bool:
-        return self.seg_ids is not None
 
 
 @dataclass(frozen=True)
@@ -306,7 +304,7 @@ class MRCFixedChannel(StatelessUplink):
         else:
             skeys = _vclient_keys(kt, ctx.active_ids)
             q_hat_b = jax.vmap(one)(skeys, sels, qb, pb)
-        bits = ctx.n_active * self.n_samples * plan.n_blocks * math.log2(self.n_is)
+        bits = ctx.n_active * self.n_samples * plan.billable * math.log2(self.n_is)
         return from_blocks(q_hat_b, ctx.d), bits, state
 
 
@@ -336,7 +334,7 @@ class MRCAdaptiveChannel(StatelessUplink):
         else:
             skeys = _vclient_keys(kt, ctx.active_ids)
             q_hat = jax.vmap(one)(skeys, sels, q, priors)
-        bits = ctx.n_active * self.n_samples * plan.n_blocks * math.log2(self.n_is)
+        bits = ctx.n_active * self.n_samples * plan.billable * math.log2(self.n_is)
         return q_hat, bits, state
 
 
@@ -376,7 +374,7 @@ class QuantizedMRCUplink(StatelessUplink):
             return (2.0 * from_blocks(q_hat_b, d) - 1.0) * K
 
         g_hat = jax.vmap(one)(sels, payload, Ks)
-        bits = ctx.n_active * (self.n_samples * plan.n_blocks * math.log2(self.n_is)
+        bits = ctx.n_active * (self.n_samples * plan.billable * math.log2(self.n_is)
                                + self.side_info_bits)
         return g_hat, bits, state
 
@@ -404,7 +402,7 @@ class IndexRelayDownlink(StatelessDownlink):
     def step_down(self, ctx, state, update, theta, theta_hat):
         n = ctx.n_clients
         th = update.theta
-        bits = n * (n - 1) * (self.n_samples * ctx.plan.n_blocks
+        bits = n * (n - 1) * (self.n_samples * ctx.plan.billable
                               * math.log2(self.n_is) + self.side_info_bits)
         return DownlinkResult(th, jnp.tile(th[None], (n, 1)), bits), state
 
@@ -436,7 +434,7 @@ class MRCBroadcastDownlink(StatelessDownlink):
                 n_is=self.n_is, n_samples=self.n_samples, chunk=self.chunk,
                 logw_fn=self.logw_fn)
             est = from_blocks(est_b, d)
-        bits = ctx.n_clients * self.n_samples * plan.n_blocks * math.log2(self.n_is)
+        bits = ctx.n_clients * self.n_samples * plan.billable * math.log2(self.n_is)
         return DownlinkResult(
             tgt, jnp.tile(clip01(est)[None], (ctx.n_clients, 1)), bits), state
 
@@ -480,7 +478,7 @@ class MRCPrivateDownlink(StatelessDownlink):
 
         est = jax.vmap(one)(skeys, sels, priors)
         theta_hat = theta_hat.at[ids].set(clip01(est))
-        bits = ctx.n_active * self.n_samples * plan.n_blocks * math.log2(self.n_is)
+        bits = ctx.n_active * self.n_samples * plan.billable * math.log2(self.n_is)
         return DownlinkResult(tgt, theta_hat, bits), state
 
 

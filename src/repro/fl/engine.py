@@ -13,21 +13,27 @@ things every scheme shares and that used to be copy-pasted per loop:
 * periodic error-feedback synchronisation (CSER / LIEC style ``flush``),
 * BitMeter accounting and evaluation history.
 
-Two execution paths produce bit-for-bit identical results
-(tests/test_fused_parity.py):
+Two execution paths (tests/test_fused_parity.py; bit-for-bit identical
+under static block plans, accuracy/bits-parity within the bucketing bound
+under adaptive ones):
 
-* **host** -- a Python round loop dispatching jitted sub-computations; the
-  only path for schemes whose block allocation is data-dependent
-  (AdaptiveAllocation / AdaptiveAvgAllocation recompute the plan from the
-  round's KL profile, which is host-side control plane).
+* **host** -- a Python round loop dispatching jitted sub-computations.
+  Adaptive allocations recompute the *exact* plan from each round's KL
+  profile on the host; this path is the parity oracle for the bucketed
+  fused execution and the fallback for non-functional channels.
 * **fused** -- the entire multi-round run is ONE ``jax.lax.scan`` over
   rounds: channel state (error-feedback memories) is an explicit carry
   pytree threaded through the pure ``step_up`` / ``step_down`` functions,
   evaluation folds in via ``lax.cond`` on the eval schedule, and the EF
-  sync flush is a ``lax.cond`` branch.  Per-round *bits* are
-  data-independent (static shapes x static plan), so communication is
-  booked host-side after the scan with zero device round-trips -- the only
-  device->host transfer of a whole run is the stacked accuracy vector.
+  sync flush is a ``lax.cond`` branch.  With a *static* plan the per-round
+  bits are data-independent, so communication is booked host-side after
+  the scan with zero device round-trips -- the only device->host transfer
+  of a whole run is the stacked accuracy vector.  With an *adaptive*
+  allocation the round's KL profile is computed on device (the Pallas
+  ``bernoulli_kl`` reduction via ``repro.kernels.ops``), a ``lax.switch``
+  selects among the allocation's precompiled bucketed plans, and the now
+  data-dependent per-round bits ride out of the scan as traced f32 vectors
+  that ``BitMeter.book_run`` books after the run.
 
 Cohort sampling is precomputed as a (rounds, n_active) schedule.
 ``cohort_rng="numpy"`` reproduces the seed's ``default_rng(seed+17)`` draws
@@ -50,9 +56,36 @@ import numpy as np
 from repro.core import mrc
 from repro.core.bernoulli import bern_kl, clip01
 from repro.core.bitmeter import BitMeter
+from repro.kernels.ops import bernoulli_kl_total
 from .channels import (BlockPlan, RoundContext, ServerUpdate, TAG_COHORT,
                        TAG_TRAIN, pin)
 from .data import Dataset
+
+
+def _kl_stats(payload, priors, *, needs_profile: bool) -> Dict[str, Any]:
+    """On-device KL statistics for the bucketed adaptive control plane.
+
+    Mirrors the host loop's profile (per-parameter KL of the posterior
+    against the client priors, averaged over the active cohort) without
+    leaving the device.  Allocations that only consume the *mean* KL
+    (``needs_profile=False``, e.g. AdaptiveAvgAllocation) take the total
+    through the Pallas ``bernoulli_kl`` streaming reduction
+    (``repro.kernels.ops.bernoulli_kl_total``) when a real accelerator
+    backend is attached; in interpret mode (CPU) the kernel emulation is
+    orders of magnitude slower than the fused XLA elementwise reduction,
+    so the jnp route is used there (the kernels' repo-wide convention:
+    interpret=True exists to *validate* on CPU, not to run hot loops).
+    Mean-over-clients of the per-client totals equals the sum of the
+    per-parameter cohort means, so both routes agree up to f32 summation
+    order.
+    """
+    p = clip01(priors)
+    if not needs_profile and jax.default_backend() != "cpu":
+        return {"profile": None,
+                "total": bernoulli_kl_total(payload, p, interpret=False)}
+    klp = jnp.mean(jax.vmap(bern_kl)(payload, p), axis=0)
+    return {"profile": klp if needs_profile else None,
+            "total": jnp.sum(klp)}
 
 
 # ---------------------------------------------------------------------------
@@ -111,15 +144,22 @@ class FLEngine:
     def fused_supported(self) -> bool:
         """True when the whole run can compile to one scanned XLA program.
 
-        Requires (a) a round-independent block plan -- ``allocation`` is
-        None or declares ``static_plan`` (adaptive allocations recompute
-        the plan from each round's KL profile on the host), and (b) both
-        channels implementing the functional step protocol.
+        Only *non-functional* channels (no ``step_up`` / ``step_down``
+        protocol) force the host loop.  Adaptive allocations are fused via
+        their bucketed control plane (``bucket_plans`` / ``select_bucket``
+        / ``finalize_plan``); an allocation exposing neither a static plan
+        nor the bucket API -- or a hand-built spec combining a
+        data-dependent plan with a periodic EF flush, a pairing no
+        registry scheme produces (the flush would need the aggregator's
+        step size inside every switch branch) -- stays host-only.
         """
         spec = self.spec
         if spec.allocation is not None and \
                 not getattr(spec.allocation, "static_plan", False):
-            return False
+            bucket_ok = all(hasattr(spec.allocation, a) for a in
+                            ("bucket_plans", "select_bucket", "finalize_plan"))
+            if not bucket_ok or spec.sync_period:
+                return False
         up_ok = all(hasattr(spec.uplink, a)
                     for a in ("step_up", "init_up_state", "flush_step"))
         dn_ok = all(hasattr(spec.downlink, a)
@@ -187,12 +227,14 @@ class FLEngine:
         if mode == "fused" and not fused_ok:
             raise ValueError(
                 f"spec {spec.name!r} needs the host control plane "
-                "(data-dependent block allocation or non-functional channels)")
-        runner = self._run_fused if (fused_ok and mode != "host") \
-            else self._run_host
+                "(non-functional channels, an allocation without the bucket "
+                "API, or a data-dependent plan combined with an EF flush)")
+        fused = fused_ok and mode != "host"
+        runner = self._run_fused if fused else self._run_host
         out = runner(shards, theta, theta_hat, meter, rounds=rounds,
                      seed=seed, eval_every=eval_every, schedule=schedule)
         out["active_schedule"] = schedule
+        out["mode"] = "fused" if fused else "host"
         return out
 
     # -- host loop ---------------------------------------------------------
@@ -271,11 +313,18 @@ class FLEngine:
         full = n_active == n
         base = jax.random.PRNGKey(seed)
 
-        plan = None
-        if spec.allocation is not None:  # static: plan once for all rounds
-            size, n_blocks, seg_ids, overhead = spec.allocation.plan(None, d)
-            plan = BlockPlan(size=size, n_blocks=n_blocks, seg_ids=seg_ids,
-                             overhead_bits=overhead)
+        alloc = spec.allocation
+        adaptive = alloc is not None and \
+            not getattr(alloc, "static_plan", False)
+        if adaptive:
+            # Bucketed control plane: one lax.switch branch per static plan.
+            plans = alloc.bucket_plans(d)
+        elif alloc is not None:  # static: plan once for all rounds
+            size, n_blocks, seg_ids, overhead = alloc.plan(None, d)
+            plans = [BlockPlan(size=size, n_blocks=n_blocks, seg_ids=seg_ids,
+                               overhead_bits=overhead)]
+        else:
+            plans = [None]
 
         eval_mask = np.zeros(rounds, bool)
         eval_mask[eval_every - 1::eval_every] = True
@@ -285,8 +334,11 @@ class FLEngine:
         if spec.sync_period:
             flush_mask[spec.sync_period - 1::spec.sync_period] = True
 
-        # Bits are data-independent, so the single trace of the scan body
-        # records the per-round (and per-flush) totals as plain floats.
+        # Static plans: bits are data-independent, so the single trace of
+        # the scan body records the per-round (and per-flush) totals as
+        # plain floats and the meter never touches the device.  Adaptive
+        # plans: bits depend on the round's bucket, so the scan emits them
+        # as traced f32 per-round vectors instead.
         booked: Dict[str, Any] = {}
 
         # The host loop *materialises* each stage's output between separate
@@ -296,6 +348,24 @@ class FLEngine:
         # therefore pinned through ``channels.pin`` (an integer-space
         # round-trip on a traced zero); the speedup comes from removing
         # per-round dispatch, not from cross-stage fusion.
+
+        def round_with_plan(plan, theta, theta_hat, up_s, dn_s, payload,
+                            priors, ctx):
+            """Uplink -> aggregate -> downlink at one (static-shape) plan."""
+            pp = ctx.pin_token
+            up_out, ul_bits, up_s = spec.uplink.step_up(
+                ctx, up_s, payload, priors)
+            up_out, up_s = pin(pp, (up_out, up_s))
+            update = spec.aggregator(ctx, theta, up_out)
+            update = ServerUpdate(theta=pin(pp, update.theta),
+                                  delta=pin(pp, update.delta)
+                                  if update.delta is not None else None,
+                                  lr=update.lr)
+            res, dn_s = spec.downlink.step_down(
+                ctx, dn_s, update, theta, theta_hat)
+            theta, theta_hat, dn_s = pin(pp, (res.theta, res.theta_hat, dn_s))
+            oh = plan.overhead_bits * n if plan is not None else 0.0
+            return theta, theta_hat, up_s, dn_s, update, ul_bits, res.bits, oh
 
         def body(carry, xs):
             theta, theta_hat, up_s, dn_s = carry
@@ -312,40 +382,58 @@ class FLEngine:
                     train_keys[active]
             payload = pin(pp, jax.vmap(task.local_train)(priors, bx, by, keys))
 
-            ctx = RoundContext(t=xs["t"], key=kt, n_clients=n, d=d,
-                               active=active, plan=plan, pin_token=pp)
-            up_out, ul_bits, up_s = spec.uplink.step_up(
-                ctx, up_s, payload, priors)
-            up_out, up_s = pin(pp, (up_out, up_s))
-            update = spec.aggregator(ctx, theta, up_out)
-            update = ServerUpdate(theta=pin(pp, update.theta),
-                                  delta=pin(pp, update.delta)
-                                  if update.delta is not None else None,
-                                  lr=update.lr)
-            res, dn_s = spec.downlink.step_down(
-                ctx, dn_s, update, theta, theta_hat)
-            theta, theta_hat, dn_s = pin(pp, (res.theta, res.theta_hat, dn_s))
-            booked["round"] = (ul_bits, res.bits)
+            def make_ctx(plan):
+                return RoundContext(t=xs["t"], key=kt, n_clients=n, d=d,
+                                    active=active, plan=plan, pin_token=pp)
 
-            if spec.sync_period:
-                def do_flush(op):
-                    th, thh, us, ds = op
-                    r_up, b_up, us = spec.uplink.flush_step(us, n, d)
-                    r_dn, b_dn, ds = spec.downlink.flush_step(ds, n, d)
-                    booked["flush"] = (b_up, b_dn)
-                    r_up, r_dn = pin(pp, (r_up, r_dn))  # residual means
-                    th = th - update.lr * (r_up + r_dn)
-                    return pin(pp, (th, jnp.tile(th[None], (n, 1)), us, ds))
+            if adaptive:
+                stats = _kl_stats(payload, priors,
+                                  needs_profile=getattr(
+                                      alloc, "needs_profile", True))
+                bidx = alloc.select_bucket(stats, d)
 
-                theta, theta_hat, up_s, dn_s = jax.lax.cond(
-                    xs["flush"], do_flush, lambda op: op,
+                def make_branch(template):
+                    def branch(op):
+                        th, thh, us, ds = op
+                        plan = alloc.finalize_plan(template, stats, d)
+                        th, thh, us, ds, _, ulb, dlb, oh = round_with_plan(
+                            plan, th, thh, us, ds, payload, priors,
+                            make_ctx(plan))
+                        bits = tuple(jnp.asarray(b, jnp.float32)
+                                     for b in (ulb, dlb, oh))
+                        return th, thh, us, ds, bits
+                    return branch
+
+                theta, theta_hat, up_s, dn_s, bits = jax.lax.switch(
+                    bidx, [make_branch(p) for p in plans],
                     (theta, theta_hat, up_s, dn_s))
+            else:
+                theta, theta_hat, up_s, dn_s, update, ul_bits, dl_bits, oh = \
+                    round_with_plan(plans[0], theta, theta_hat, up_s, dn_s,
+                                    payload, priors, make_ctx(plans[0]))
+                booked["round"] = (ul_bits, dl_bits, oh)
+                bits = ()
+
+                if spec.sync_period:
+                    def do_flush(op):
+                        th, thh, us, ds = op
+                        r_up, b_up, us = spec.uplink.flush_step(us, n, d)
+                        r_dn, b_dn, ds = spec.downlink.flush_step(ds, n, d)
+                        booked["flush"] = (b_up, b_dn)
+                        r_up, r_dn = pin(pp, (r_up, r_dn))  # residual means
+                        th = th - update.lr * (r_up + r_dn)
+                        return pin(pp, (th, jnp.tile(th[None], (n, 1)),
+                                        us, ds))
+
+                    theta, theta_hat, up_s, dn_s = jax.lax.cond(
+                        xs["flush"], do_flush, lambda op: op,
+                        (theta, theta_hat, up_s, dn_s))
 
             acc = jax.lax.cond(
                 xs["eval"],
                 lambda th: jnp.asarray(task.evaluate(th), jnp.float32),
                 lambda th: jnp.full((), jnp.nan, jnp.float32), theta)
-            return (theta, theta_hat, up_s, dn_s), acc
+            return (theta, theta_hat, up_s, dn_s), (acc,) + bits
 
         carry0 = (theta, theta_hat,
                   spec.uplink.init_up_state(n, d),
@@ -355,19 +443,38 @@ class FLEngine:
               "eval": jnp.asarray(eval_mask),
               "flush": jnp.asarray(flush_mask),
               "pin": jnp.zeros(rounds, jnp.int32)}
-        (theta, theta_hat, _, _), accs = jax.lax.scan(body, carry0, xs)
+        (theta, theta_hat, _, _), outs = jax.lax.scan(body, carry0, xs)
 
-        # ---- host-side communication booking (no device involvement) -----
-        ul_base, dl_base = booked["round"]
-        fl_up, fl_dn = booked.get("flush", (0.0, 0.0))
-        snaps = meter.book_run(
-            [ul_base + (fl_up if flush_mask[t] else 0.0)
-             for t in range(rounds)],
-            [dl_base + (fl_dn if flush_mask[t] else 0.0)
-             for t in range(rounds)],
-            overhead_bits=plan.overhead_bits * n if plan is not None else 0.0,
-            snapshot_mask=eval_mask)
-        accs = np.asarray(accs)  # the run's single device->host transfer
+        if adaptive:
+            # Traced-bits booking: the scan's stacked per-round bit totals
+            # are the only extra device->host transfer.  They are exact as
+            # long as they stay below 2**24 -- every term is an integer
+            # times log2 of a pow2 n_is, and f32 represents integers
+            # exactly up to there -- so guard the bound loudly instead of
+            # letting the accounting drift silently at larger scales.
+            accs, ul, dl, oh = (np.asarray(o) for o in outs)
+            if max((float(np.max(np.abs(v))) if v.size else 0.0)
+                   for v in (ul, dl, oh)) >= 2.0 ** 24:
+                raise OverflowError(
+                    "per-round traced bits exceed the f32 integer-exact "
+                    "range (2**24); run mode='host' for exact accounting "
+                    "at this scale")
+            snaps = meter.book_run(np.asarray(ul, np.float64),
+                                   np.asarray(dl, np.float64),
+                                   overhead_bits=np.asarray(oh, np.float64),
+                                   snapshot_mask=eval_mask)
+        else:
+            # Host-side booking with zero device involvement.
+            (accs,) = outs
+            accs = np.asarray(accs)
+            ul_base, dl_base, oh = booked["round"]
+            fl_up, fl_dn = booked.get("flush", (0.0, 0.0))
+            snaps = meter.book_run(
+                [ul_base + (fl_up if flush_mask[t] else 0.0)
+                 for t in range(rounds)],
+                [dl_base + (fl_dn if flush_mask[t] else 0.0)
+                 for t in range(rounds)],
+                overhead_bits=oh, snapshot_mask=eval_mask)
         history: List[Dict[str, float]] = [
             {"round": int(t) + 1, "acc": float(accs[t]),
              "cum_bits": cum_bits, "bpp_so_far": bpp}

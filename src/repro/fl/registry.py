@@ -11,8 +11,10 @@ from __future__ import annotations
 
 from typing import Callable, Dict
 
-from repro.core.blocks import AdaptiveAllocation, FixedAllocation
+from repro.core.blocks import (AdaptiveAllocation, AdaptiveAvgAllocation,
+                               FixedAllocation)
 from repro.core.quantizers import FLOAT_BITS
+from repro.kernels.ops import mrc_logw_fn
 from .channels import (DenseChannel, IndexRelayDownlink, MRCAdaptiveChannel,
                        MRCBroadcastDownlink, MRCFixedChannel,
                        MRCPrivateDownlink, QuantizedMRCUplink, SignEFChannel,
@@ -24,14 +26,22 @@ BICOMPFL_VARIANTS = ("GR", "GR-Reconst", "PR", "PR-SplitDL")
 
 def bicompfl_spec(variant: str, *, allocation, n_is: int = 256, n_ul: int = 1,
                   n_dl: int = 1, chunk: int = 16, logw_fn=None,
-                  participation: float = 1.0) -> EngineSpec:
+                  participation: float = 1.0,
+                  pallas_logw: bool = False) -> EngineSpec:
     """BiCompFL (probabilistic-mask) variants, paper Algorithms 1 & 2.
 
     ``n_dl`` must be resolved by the caller (the paper default is
-    ``n_clients * n_ul``, which needs the cohort size).
+    ``n_clients * n_ul``, which needs the cohort size).  ``pallas_logw``
+    routes the fixed-block MRC importance-weight matvec through the Pallas
+    ``mrc_weights`` kernel (``repro.kernels.ops.mrc_logw_fn``) on both
+    directions.
     """
     if variant not in BICOMPFL_VARIANTS:
         raise ValueError(variant)
+    if pallas_logw:
+        if logw_fn is not None:
+            raise ValueError("pass either logw_fn or pallas_logw, not both")
+        logw_fn = mrc_logw_fn()
     if participation < 1.0 and variant != "PR":
         raise ValueError("partial participation requires private shared "
                          "randomness (the PR variant); GR needs all clients "
@@ -142,15 +152,22 @@ def baseline_spec(scheme: str, *, n: int, d: int, server_lr: float = 1.0,
 
 def all_schemes(*, n: int, d: int, n_is: int = 16, block: int = 64,
                 n_dl: int = None, server_lr: float = 1.0,
-                reset_period: int = 50):
+                reset_period: int = 50, include_adaptive: bool = False):
     """Every named scheme as ``(name, task_kind, spec_factory)`` triples.
 
     ``task_kind`` is "mask" (probabilistic-mask BiCompFL) or "delta"
     (conventional-FL: the baselines and BiCompFL-CFL).  Factories build a
     fresh spec per call -- EF channels carry state, so parity sweeps must
     never share channel instances between runs.  Used by the fused-vs-host
-    parity suite and the round-throughput benchmark to enumerate the full
-    static-allocation scheme matrix.
+    parity suite, the bit-accounting property suite and the
+    round-throughput benchmark to enumerate the scheme matrix.
+
+    ``include_adaptive=True`` appends the KL-driven allocations (the
+    Isik-style segment codec on GR and PR, plus the paper's low-complexity
+    Adaptive-Avg).  They are kept out of the default matrix because the
+    fused engine runs them through *bucketed* plans -- equal to the host
+    loop's exact plan only up to the bucketing bound, where the static
+    schemes are bit-identical across engine paths.
     """
     ndl = n if n_dl is None else n_dl
     out = []
@@ -159,6 +176,22 @@ def all_schemes(*, n: int, d: int, n_is: int = 16, block: int = 64,
                     lambda v=v: bicompfl_spec(
                         v, allocation=FixedAllocation(block), n_is=n_is,
                         n_dl=ndl)))
+    if include_adaptive:
+        out.append(("bicompfl-gr-adaptive", "mask",
+                    lambda: bicompfl_spec(
+                        "GR", allocation=AdaptiveAllocation(n_is=n_is),
+                        n_is=n_is, n_dl=ndl)))
+        out.append(("bicompfl-pr-adaptive", "mask",
+                    lambda: bicompfl_spec(
+                        "PR", allocation=AdaptiveAllocation(n_is=n_is),
+                        n_is=n_is, n_dl=ndl)))
+        out.append(("bicompfl-gr-adaptive-avg", "mask",
+                    lambda: bicompfl_spec(
+                        "GR",
+                        allocation=AdaptiveAvgAllocation(
+                            n_is=n_is, min_block=block // 2,
+                            max_block=8 * block),
+                        n_is=n_is, n_dl=ndl)))
     out.append(("bicompfl-cfl", "delta",
                 lambda: cfl_spec(n_is=n_is, block_size=16,
                                  server_lr=server_lr)))

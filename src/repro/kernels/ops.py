@@ -52,6 +52,27 @@ def bernoulli_kl(q: jax.Array, p: jax.Array, *, interpret: bool = True):
     return bernoulli_kl_pallas(qp, pp, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bernoulli_kl_total(q: jax.Array, p: jax.Array, *, interpret: bool = True):
+    """Mean-over-clients total KL(q||p): q, p (n, d) -> f32 scalar (nats).
+
+    The per-(client, block) partial sums run through the Pallas streaming
+    reduction (``bernoulli_kl_pallas``); rows pad with q == p == 0.5 (zero
+    KL), so the padded result is exact.  This is the on-device profile
+    statistic the fused engine feeds ``AdaptiveAvgAllocation`` --
+    mean_i sum_e KL equals sum_e mean_i KL, which is what the host control
+    plane computed from numpy.
+    """
+    n, d = q.shape
+    nb = -(-d // KL_TILE_S)
+    qp = _pad_axis(q.astype(jnp.float32), 1, KL_TILE_S, value=0.5)
+    pp = _pad_axis(p.astype(jnp.float32), 1, KL_TILE_S, value=0.5)
+    sums = bernoulli_kl_pallas(qp.reshape(n * nb, KL_TILE_S),
+                               pp.reshape(n * nb, KL_TILE_S),
+                               interpret=interpret)
+    return jnp.sum(sums) / n
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
                     scale: float = 1.0, interpret: bool = True) -> jax.Array:
@@ -103,8 +124,14 @@ def rwkv_time_mix(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
     return jnp.moveaxis(out, 1, 2)
 
 
+@functools.lru_cache(maxsize=None)
 def mrc_logw_fn(interpret: bool = True):
-    """Return a ``logw_fn`` closure for ``repro.core.mrc.encode_fixed``."""
+    """Return a ``logw_fn`` closure for ``repro.core.mrc.encode_fixed``.
+
+    Cached per ``interpret`` value: ``encode_fixed`` treats ``logw_fn`` as
+    a static jit argument (hashed by identity), so handing out a fresh
+    closure per call would force a retrace per channel construction.
+    """
     def fn(x, a, b):
         return mrc_logw(x, a, b, interpret=interpret)
     return fn

@@ -6,14 +6,26 @@ reproduce the host round loop **bit-for-bit** -- identical histories
 Covers every registry scheme with a static block plan (all four BiCompFL
 variants, BiCompFL-CFL, the seven baselines incl. the CSER/LIEC flush
 path), full and partial participation, both cohort RNGs, and non-unit eval
-cadence.  Schemes needing the host control plane (adaptive allocation) must
-refuse ``mode="fused"`` and silently fall back under ``mode="auto"``.
+cadence.
+
+Adaptive allocations run fused through *bucketed* plans (``lax.switch``
+over precompiled block sets, KL profile computed on device), so the host
+loop's exact per-round plan is the parity *oracle* rather than a bitwise
+twin: accuracy must agree within tolerance and total bits must respect the
+bucketing bound (conservative: never above the exact plan's budget plus the
+allocation's declared ``bucket_overhead_bits``).  When the bucket set
+contains the exact plan -- always true for AdaptiveAvg, whose buckets *are*
+its pow2 plan space, and arranged via ``buckets=`` for the segment codec --
+parity is again exact.
 """
+import math
+
 import jax
 import numpy as np
 import pytest
 
-from repro.core.blocks import AdaptiveAllocation, FixedAllocation
+from repro.core.blocks import (AdaptiveAllocation, AdaptiveAvgAllocation,
+                               FixedAllocation)
 from repro.fl import registry
 from repro.fl.data import make_synthetic, partition_iid
 from repro.fl.engine import FLEngine
@@ -104,17 +116,159 @@ def test_fused_eval_cadence(mask_setup):
     assert [h["round"] for h in out["history"]] == [2, 3]
 
 
-def test_adaptive_allocation_falls_back_to_host(mask_setup):
+class _ProbedAdaptive(AdaptiveAllocation):
+    """Records each exact host plan's *requested* block count -- the value
+    ``select_bucket`` floors onto the grid -- to build exact bucket sets.
+
+    Exact fused-vs-host parity is only constructible when no duplicate
+    binning edges collapse (the host gumbel capacity is the post-collapse
+    count while a switch branch's capacity is static), so the probe
+    asserts the premise loudly instead of letting a future fp change
+    surface as an inscrutable bit mismatch."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.planned = []
+
+    def plan(self, kl, d):
+        out = super().plan(kl, d)
+        if kl is not None:
+            total = float(np.sum(kl)) + 1e-12
+            target = self.target_ratio * math.log(self.n_is)
+            requested = min(self._cap(d),
+                            max(self.min_blocks, math.ceil(total / target)))
+            assert requested == out[1], \
+                "binning edges collapsed; exact-parity premise broken"
+            self.planned.append(requested)
+        return out
+
+
+def _run_adaptive_pair(task, shards, make_alloc, *, rounds=3, seed=11,
+                       variant="GR", **kw):
+    """Host (exact plan) vs fused (bucketed plan) for an adaptive scheme."""
+    n = int(shards.x.shape[0])
+    host = FLEngine(task, registry.bicompfl_spec(
+        variant, allocation=make_alloc(), n_is=16, n_dl=n, **kw)).run(
+        shards, rounds=rounds, seed=seed, mode="host")
+    fused = FLEngine(task, registry.bicompfl_spec(
+        variant, allocation=make_alloc(), n_is=16, n_dl=n, **kw)).run(
+        shards, rounds=rounds, seed=seed, mode="fused")
+    return host, fused
+
+
+def test_adaptive_fused_supported_no_fallback(mask_setup):
+    """The PR 2 host auto-fallback is gone: adaptive allocations are fused-
+    eligible, mode="fused" runs them, and mode="auto" picks the fused path."""
     task, shards = mask_setup
     spec = registry.bicompfl_spec("GR", allocation=AdaptiveAllocation(n_is=16),
                                   n_is=16, n_dl=3)
     engine = FLEngine(task, spec)
-    assert not engine.fused_supported()
-    with pytest.raises(ValueError):
-        engine.run(shards, rounds=2, seed=1, mode="fused")
+    assert engine.fused_supported()
     auto = engine.run(shards, rounds=2, seed=11, mode="auto")
-    host = engine.run(shards, rounds=2, seed=11, mode="host")
-    _assert_identical(host, auto)
+    assert auto["mode"] == "fused"
+    fused = engine.run(shards, rounds=2, seed=11, mode="fused")
+    _assert_identical(fused, auto)
+
+
+def test_non_functional_channel_still_host_only(mask_setup):
+    """Revised eligibility: only non-functional channels force the host loop
+    (plus allocations exposing neither a static plan nor the bucket API)."""
+    task, shards = mask_setup
+
+    class LegacyOnlyDownlink:  # object shell without the functional core
+        broadcast_shareable = True
+
+        def distribute(self, ctx, update, theta, theta_hat):
+            raise NotImplementedError
+
+    spec = registry.bicompfl_spec("GR", allocation=FixedAllocation(64),
+                                  n_is=16, n_dl=3)
+    spec.downlink = LegacyOnlyDownlink()
+    assert not FLEngine(task, spec).fused_supported()
+
+    class NoBucketAdaptive:  # data-dependent plan without the bucket API
+        static_plan = False
+        needs_kl = True
+
+        def plan(self, kl, d):
+            return 64, -(-d // 64), None, 0.0
+
+    spec2 = registry.bicompfl_spec("GR", allocation=FixedAllocation(64),
+                                   n_is=16, n_dl=3)
+    spec2.allocation = NoBucketAdaptive()
+    engine2 = FLEngine(task, spec2)
+    assert not engine2.fused_supported()
+    with pytest.raises(ValueError):
+        engine2.run(shards, rounds=1, seed=1, mode="fused")
+
+
+def test_fused_adaptive_avg_exact_parity(mask_setup):
+    """AdaptiveAvg's bucket set IS its pow2 plan space, so the fused bucketed
+    run reproduces the host exact-plan run bit-for-bit (bits included)."""
+    task, shards = mask_setup
+    host, fused = _run_adaptive_pair(
+        task, shards,
+        lambda: AdaptiveAvgAllocation(n_is=16, min_block=32, max_block=512))
+    assert fused["mode"] == "fused" and host["mode"] == "host"
+    _assert_identical(host, fused)
+
+
+def test_fused_adaptive_exact_bucket_contains_plan(mask_setup):
+    """Segment codec: when the bucket set contains every exact per-round
+    block count, the fused run is bit-identical to the host oracle."""
+    task, shards = mask_setup
+    probe = _ProbedAdaptive(n_is=16, target_ratio=0.02)
+    host = FLEngine(task, registry.bicompfl_spec(
+        "GR", allocation=probe, n_is=16, n_dl=3)).run(
+        shards, rounds=3, seed=11, mode="host")
+    assert len(set(probe.planned)) > 1  # the plan really moves across rounds
+    fused = FLEngine(task, registry.bicompfl_spec(
+        "GR", allocation=AdaptiveAllocation(
+            n_is=16, target_ratio=0.02, buckets=tuple(probe.planned)),
+        n_is=16, n_dl=3)).run(shards, rounds=3, seed=11, mode="fused")
+    _assert_identical(host, fused)
+
+
+def test_fused_adaptive_bucketing_bound(mask_setup):
+    """Default (geometric) buckets: accuracy stays within tolerance of the
+    exact-plan host oracle.  Bits: the conservativeness guarantee is
+    per-round-for-the-same-KL-profile (tests/test_allocation.py pins it),
+    so only round 1 -- where both trajectories share the initial state --
+    gets the strict inequality; after that the trajectories drift and the
+    whole run is held to a band, exactly like the benchmark oracle."""
+    task, shards = mask_setup
+    make_alloc = lambda: AdaptiveAllocation(n_is=16, target_ratio=0.02)
+    host, fused = _run_adaptive_pair(task, shards, make_alloc)
+    accs_h = np.array([h["acc"] for h in host["history"]])
+    accs_f = np.array([h["acc"] for h in fused["history"]])
+    np.testing.assert_allclose(accs_f, accs_h, atol=0.2)
+    bound = make_alloc().bucket_overhead_bits  # declared, per round
+    assert fused["history"][0]["cum_bits"] <= \
+        host["history"][0]["cum_bits"] + bound  # round 1: same KL profile
+    ratio = fused["meter"]["total_bits"] / host["meter"]["total_bits"]
+    assert 0.4 <= ratio <= 2.0
+
+
+@pytest.mark.parametrize("cohort_rng", ["numpy", "jax"])
+def test_fused_adaptive_partial_participation(mask_setup, cohort_rng):
+    """PR + segment codec under partial participation: the KL profile and
+    the bucketed plan are derived from the active cohort only, on device.
+    With the probed exact bucket set the fused run must again be
+    bit-identical to the host oracle -- under both cohort RNGs."""
+    task, shards = mask_setup
+    probe = _ProbedAdaptive(n_is=16, target_ratio=0.02)
+    host = FLEngine(task, registry.bicompfl_spec(
+        "PR", allocation=probe, n_is=16, n_dl=3,
+        participation=0.67)).run(
+        shards, rounds=3, seed=11, mode="host", cohort_rng=cohort_rng)
+    fused = FLEngine(task, registry.bicompfl_spec(
+        "PR", allocation=AdaptiveAllocation(
+            n_is=16, target_ratio=0.02, buckets=tuple(probe.planned)),
+        n_is=16, n_dl=3, participation=0.67)).run(
+        shards, rounds=3, seed=11, mode="fused", cohort_rng=cohort_rng)
+    assert fused["mode"] == "fused"
+    assert fused["active_schedule"].shape == (3, 2)  # 0.67 of 3 -> 2 active
+    _assert_identical(host, fused)
 
 
 def test_fixed_allocation_auto_uses_fused(mask_setup):

@@ -51,6 +51,20 @@ def test_bernoulli_kl_matches_ref(shape, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("shape", [(1, 16), (3, 100), (4, 700), (10, 1536)])
+def test_bernoulli_kl_total_matches_mean_reduction(shape):
+    """The engine-facing profile statistic: mean-over-clients total KL via
+    the Pallas streaming reduction == the plain elementwise reduction
+    (padding rows carry q == p == 0.5, zero KL, so the pad is exact)."""
+    n, d = shape
+    q = jax.random.uniform(KEY, (n, d), minval=0.05, maxval=0.95)
+    p = jax.random.uniform(jax.random.fold_in(KEY, 2), (n, d),
+                           minval=0.05, maxval=0.95)
+    out = ops.bernoulli_kl_total(q, p)
+    expect = jnp.mean(ref.bernoulli_kl_ref(q, p))  # mean of per-client totals
+    np.testing.assert_allclose(float(out), float(expect), rtol=1e-5)
+
+
 def test_logw_zero_padding_exact():
     """Padded entries contribute exactly zero -- unpadded prefix identical."""
     nb, nis, s = 2, 60, 50
