@@ -14,7 +14,12 @@ Per scheme we record:
   program compile (what a single cold run pays);
 * ``fused_s`` / ``fused_rps``   -- fused path re-run after compilation (the
   steady-state cost of every further run / seed / restart in a sweep);
-* ``speedup`` = host_rps-to-fused_rps ratio, plus ``speedup_cold``.
+* ``speedup`` = host_rps-to-fused_rps ratio, plus ``speedup_cold``;
+* ``wire_*``                    -- bytes on the wire from a short
+  ``wire="audit"`` host run (every payload serialized through
+  ``repro.wire`` and reconciled against the BitMeter; the reconcile
+  failing aborts the benchmark): total stream bytes, bytes/round,
+  payload vs framing split, and message count.
 
 The matrix includes an *adaptive* BiCompFL scheme (KL-driven block
 allocation): the fused path runs it through bucketed plans selected on
@@ -116,10 +121,28 @@ def bench_scheme(name, task, spec_factory, shards, theta0, *, rounds,
         speedup=round(host_s / fused_s, 2),
         speedup_cold=round(host_s / cold_s, 2),
         final_acc=host_out["final_acc"])
+
+    # bytes-on-wire: a short wire-audited host run serializes every payload
+    # and reconciles booked bits against the stream (divergence raises).
+    audit_rounds = min(rounds, 5)
+    wire_out = FLEngine(task, spec_factory()).run(
+        shards, theta0, rounds=audit_rounds, seed=0,
+        eval_every=audit_rounds, mode="host", wire="audit")
+    ws = wire_out["wire"]
+    res.update(
+        wire_rounds=audit_rounds,
+        wire_stream_bytes=int(ws["stream_bytes"]),
+        wire_bytes_per_round=round(ws["stream_bytes"] / audit_rounds, 1),
+        wire_payload_bits=int(ws["payload_bits"]),
+        wire_framing_bits=int(ws["framing_bits"]),
+        wire_messages=int(ws["messages"]))
+
     print(f"{name:18s} host={host_s:7.2f}s ({res['host_rps']:7.1f} r/s)  "
           f"fused={fused_s:7.2f}s ({res['fused_rps']:7.1f} r/s)  "
           f"cold={cold_s:7.2f}s  speedup={res['speedup']:5.2f}x "
-          f"(cold {res['speedup_cold']:4.2f}x)", flush=True)
+          f"(cold {res['speedup_cold']:4.2f}x)  "
+          f"wire={res['wire_bytes_per_round']:,.0f}B/round "
+          f"({ws['messages']} msgs/{audit_rounds}r)", flush=True)
     return res
 
 

@@ -10,6 +10,9 @@
   ablation_block Appendix J.4: block size d/B.
   ablation_nclients  Appendix J.1: number of clients.
   kernel_micro   Pallas kernel (interpret) vs jnp oracle timing + allclose.
+  wire_audit     bytes on the wire per scheme: short wire-audited host runs
+                 over the full registry matrix (stream bytes per round,
+                 payload vs framing split; reconcile runs inside).
   roofline       reads dryrun_*.json -> the per-(arch x shape x mesh) table.
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
@@ -219,6 +222,43 @@ def kernel_micro(fast: bool):
           "check; TPU timing requires hardware)")
 
 
+def wire_audit(fast: bool):
+    """Bytes on the wire per scheme (repro.wire bitstream layer).
+
+    Every scheme in the registry matrix runs a short ``wire="audit"`` host
+    run: each payload is serialized through the codecs, the decoded values
+    drive the trajectory, and the BitMeter is reconciled against the
+    stream -- a booked-vs-serialized divergence raises inside ``run``.
+    The table's bytes column is the *actual* stream length, not a formula.
+    """
+    rounds = 2 if fast else 3
+    print(f"\n== wire_audit: {rounds} wire-audited host rounds, 4 clients, "
+          f"reset_period=2 ==")
+    k, shards, test = _setup(iid=True, n_train=240, n_test=120, hw=6)
+    task = _mask_task(k, test, hw=6, width=32, local_epochs=1)
+    net = make_mlp(in_dim=36, widths=(32,))
+    ctask, theta0 = make_cfl_task(net, jax.random.fold_in(k, 3), test.x,
+                                  test.y, local_epochs=1, batch_size=40,
+                                  local_lr=3e-3)
+    n, d = int(shards.x.shape[0]), int(theta0.shape[0])
+    print(f"{'scheme':26s} {'bytes':>10s} {'B/round':>9s} {'payload_b':>11s} "
+          f"{'framing_b':>10s} {'msgs':>5s} {'bpp':>9s}")
+    for name, kind, factory in registry.all_schemes(
+            n=n, d=d, n_is=16, block=64, reset_period=2,
+            include_adaptive=True):
+        t = task if kind == "mask" else ctask
+        th0 = None if kind == "mask" else theta0
+        out = FLEngine(t, factory()).run(shards, th0, rounds=rounds, seed=0,
+                                         eval_every=rounds, mode="host",
+                                         wire="audit")
+        ws = out["wire"]
+        print(f"{name:26s} {ws['stream_bytes']:>10,} "
+              f"{ws['stream_bytes'] / rounds:>9,.0f} "
+              f"{ws['payload_bits']:>11,} {ws['framing_bits']:>10,} "
+              f"{ws['messages']:>5} {out['meter']['bpp']:>9.4f}", flush=True)
+        jax.clear_caches()
+
+
 def roofline(fast: bool):
     print("\n== roofline table (from dry-run artifacts) ==")
     found = False
@@ -260,6 +300,7 @@ BENCHES = {
     "ablation_block": ablation_block,
     "ablation_nclients": ablation_nclients,
     "kernel_micro": kernel_micro,
+    "wire_audit": wire_audit,
     "roofline": roofline,
 }
 

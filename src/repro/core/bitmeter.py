@@ -14,6 +14,10 @@ from dataclasses import dataclass, field
 from typing import Dict, List
 
 
+class ReconcileError(AssertionError):
+    """Booked bits diverge from a serialized wire stream (loud by design)."""
+
+
 @dataclass
 class BitMeter:
     """Accumulates uplink/downlink bits over rounds for one scheme."""
@@ -93,6 +97,56 @@ class BitMeter:
     @property
     def total_bits(self) -> float:
         return self.uplink_bits + self.downlink_bits
+
+    def reconcile(self, uplink_stream_bits: float,
+                  downlink_stream_bits: float, *, framing_bits: float = 0.0,
+                  n_messages: int = 0, frame_header_bits: int = 0,
+                  tol_bits: float = 0.0,
+                  rel_tol: float = 1e-9) -> Dict[str, float]:
+        """Audit booked bits against serialized stream lengths.
+
+        ``uplink_stream_bits`` / ``downlink_stream_bits`` are the summed
+        *payload* bits of a wire stream per direction (framing excluded);
+        they must match the booked per-direction totals within ``tol_bits``
+        plus a ``rel_tol`` relative slack for float64 bookkeeping round-off
+        (the codecs themselves are exact -- see repro.wire.frame for the
+        tolerance contract).  When framing figures are supplied, the
+        framing overhead must lie within the per-message envelope
+        ``[n_messages * frame_header_bits,
+        n_messages * (frame_header_bits + 7)]`` (header + <8 pad bits).
+        Raises :class:`ReconcileError` on any divergence; returns the
+        audit report otherwise.
+        """
+        def check(link: str, booked: float, stream: float) -> float:
+            err = abs(booked - stream)
+            tol = tol_bits + rel_tol * max(abs(booked), abs(stream))
+            if err > tol:
+                raise ReconcileError(
+                    f"{link} booked {booked} bits but the wire stream "
+                    f"carries {stream} payload bits (|diff| {err} > "
+                    f"tolerance {tol})")
+            return err
+
+        up_err = check("uplink", self.uplink_bits, uplink_stream_bits)
+        dn_err = check("downlink", self.downlink_bits, downlink_stream_bits)
+        if n_messages:
+            lo = n_messages * frame_header_bits
+            hi = n_messages * (frame_header_bits + 7)
+            if not lo <= framing_bits <= hi:
+                raise ReconcileError(
+                    f"framing overhead {framing_bits} bits outside "
+                    f"[{lo}, {hi}] for {n_messages} messages of "
+                    f"{frame_header_bits}-bit headers")
+        return {
+            "uplink_booked_bits": self.uplink_bits,
+            "uplink_stream_bits": uplink_stream_bits,
+            "uplink_err_bits": up_err,
+            "downlink_booked_bits": self.downlink_bits,
+            "downlink_stream_bits": downlink_stream_bits,
+            "downlink_err_bits": dn_err,
+            "framing_bits": framing_bits,
+            "n_messages": n_messages,
+        }
 
     def summary(self) -> Dict[str, float]:
         return {

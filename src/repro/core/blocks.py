@@ -96,6 +96,14 @@ class FixedAllocation:
         """Return (block_size, n_blocks, seg_ids=None, overhead_bits)."""
         return self.block_size, self.blocks_for(d), None, 0.0
 
+    # -- wire codec: the plan is static config, zero bits cross the wire --
+    def encode_plan(self, plan: "BlockPlan", w) -> None:
+        pass
+
+    def decode_plan(self, r, d: int) -> "BlockPlan":
+        return BlockPlan(size=self.block_size, n_blocks=self.blocks_for(d),
+                         seg_ids=None, overhead_bits=0.0)
+
 
 @dataclass
 class AdaptiveAvgAllocation:
@@ -128,6 +136,18 @@ class AdaptiveAvgAllocation:
                                 math.log2(self.min_block), math.log2(self.max_block)))
         n_blocks = _pad_to(d, size) // size
         return size, n_blocks, None, math.ceil(math.log2(self.max_block))
+
+    # -- wire codec: the pow2 size exponent, exactly the booked overhead --
+    def encode_plan(self, plan: "BlockPlan", w) -> None:
+        from repro.wire import codecs as wcodecs
+        wcodecs.put_plan_avg(w, plan.size, self.max_block)
+
+    def decode_plan(self, r, d: int) -> "BlockPlan":
+        from repro.wire import codecs as wcodecs
+        size = wcodecs.get_plan_avg(r, self.max_block)
+        return BlockPlan(size=size, n_blocks=_pad_to(d, size) // size,
+                         seg_ids=None,
+                         overhead_bits=math.ceil(math.log2(self.max_block)))
 
     # -- bucketed (fused) control plane -----------------------------------
 
@@ -206,6 +226,33 @@ class AdaptiveAllocation:
         seg = np.cumsum(seg).astype(np.int32)
         overhead = (int(seg.max()) + 1) * math.ceil(math.log2(self.max_block))
         return None, int(seg.max()) + 1, seg, float(overhead)
+
+    # -- wire codec: one (length - 1) field per billable segment ----------
+    # The cold-start plan (no KL profile yet) books zero overhead, so it
+    # writes zero bits; the decoder detects the empty header and rebuilds
+    # the deterministic fixed-256 fallback from ``d`` alone.
+
+    def _cold_plan(self, d: int) -> "BlockPlan":
+        size = 256
+        n_blocks = _pad_to(d, size) // size
+        seg = np.minimum(np.arange(d) // size, n_blocks - 1).astype(np.int32)
+        return BlockPlan(size=None, n_blocks=n_blocks, seg_ids=seg,
+                         overhead_bits=0.0)
+
+    def encode_plan(self, plan: "BlockPlan", w) -> None:
+        from repro.wire import codecs as wcodecs
+        if plan.overhead_bits:
+            wcodecs.put_plan_segments(w, plan.seg_ids, self.max_block)
+
+    def decode_plan(self, r, d: int) -> "BlockPlan":
+        from repro.wire import codecs as wcodecs
+        if r.bits_left == 0:
+            return self._cold_plan(d)
+        seg = wcodecs.get_plan_segments(r, d, self.max_block)
+        n_seg = int(seg[-1]) + 1
+        overhead = n_seg * math.ceil(math.log2(self.max_block))
+        return BlockPlan(size=None, n_blocks=n_seg, seg_ids=seg,
+                         overhead_bits=float(overhead))
 
     # -- bucketed (fused) control plane -----------------------------------
 

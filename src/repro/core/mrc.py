@@ -252,6 +252,16 @@ def decode_segments(
     return (u_sel < clip01(p)).astype(jnp.float32)
 
 
+def receive_segments(
+    shared_key: jax.Array, indices: jax.Array, p: jax.Array, seg_ids: jax.Array, *, n_is: int
+) -> jax.Array:
+    """Decode n_samples relayed segment-index vectors: (n_samples, n_seg) -> (d,)."""
+    samples = jax.vmap(
+        lambda ell, idx: decode_segments(sample_key(shared_key, ell), idx, p, seg_ids, n_is=n_is)
+    )(jnp.arange(indices.shape[0]), indices)
+    return jnp.mean(samples, axis=0)
+
+
 def transmit_segments(
     shared_key, select_key, q, p, seg_ids, *, n_is: int, n_seg: int, n_samples: int = 1
 ):

@@ -74,9 +74,14 @@ def qsgd_sample(key: jax.Array, post: QsgdPosterior) -> jax.Array:
 
 
 def sign_compress(g: jax.Array) -> jax.Array:
-    """1-bit SignSGD with magnitude scaling (mean-|g| scale, as in MemSGD)."""
+    """1-bit SignSGD with magnitude scaling (mean-|g| scale, as in MemSGD).
+
+    The sign is *binary* (zero maps to +1), not ternary ``jnp.sign``: the
+    booked rate is 1 bit/param + one scale, and only a two-valued sign is
+    representable at that rate (cf. the repro.wire sign codec).
+    """
     scale = jnp.mean(jnp.abs(g))
-    return scale * jnp.sign(g)
+    return scale * jnp.where(g >= 0, 1.0, -1.0)
 
 
 def topk_compress(g: jax.Array, k: int) -> jax.Array:

@@ -76,6 +76,9 @@ from repro.core.blocks import BlockPlan  # noqa: F401  (re-export: the plan
                                          # travels with the channel API)
 from repro.core.quantizers import (FLOAT_BITS, sign_compress, topk_bits,
                                    topk_compress)
+from repro.wire import (DIR_DOWN, DIR_FLUSH_UP, DIR_UP, SERVER, BitReader,
+                        BitWriter, Message)
+from repro.wire import codecs as wcodecs
 
 # ---------------------------------------------------------------------------
 # Key-derivation tags (shared-randomness schedule, identical to the seed).
@@ -203,6 +206,37 @@ class DownlinkResult(NamedTuple):
     bits: float
 
 
+@dataclass(frozen=True)
+class WireEnv:
+    """Decoder-side context for ``decode_down`` (cf. repro.wire).
+
+    Everything here is information the *receiving* party legitimately holds:
+    its own uplink transmission (``up_msgs``, for index-relay downlinks),
+    the shared uplink/aggregator definitions, the round's priors, and --
+    server-side only -- the aggregator's proposed :class:`ServerUpdate`
+    (used where the downlink result's ``theta`` never crosses the wire
+    because it stays on the federator).
+    """
+
+    uplink: Any
+    aggregator: Any
+    priors: Any
+    up_msgs: Any
+    update: ServerUpdate
+
+
+def _wire_msg(direction: int, sender: int, recipient: int,
+              w: BitWriter) -> Message:
+    """Seal a finished payload writer into an (unstamped) frame."""
+    return Message(direction=direction, sender=int(sender),
+                   recipient=int(recipient), payload=w.getvalue(),
+                   payload_bits=w.bits_written)
+
+
+def _wire_reader(m: Message) -> BitReader:
+    return BitReader(m.payload, m.payload_bits)
+
+
 @runtime_checkable
 class UplinkChannel(Protocol):
     def init_up_state(self, n: int, d: int): ...
@@ -243,11 +277,23 @@ class StatelessUplink:
         out, bits, _ = self.step_up(ctx, EMPTY_STATE, payload, priors)
         return out, bits
 
+    def transmit_wire(self, ctx, payload, priors):
+        """Like ``transmit`` but also returns the encoded wire messages."""
+        out, bits, _, msgs = self.encode_up(ctx, EMPTY_STATE, payload, priors)
+        return out, bits, msgs
+
     def flush_step(self, state, n: int, d: int):
         return 0.0, 0.0, state
 
     def flush(self, n: int, d: int):
         return 0.0, 0.0
+
+    def flush_wire(self, n: int, d: int):
+        r, bits = self.flush(n, d)
+        return r, bits, []
+
+    def decode_flush_up(self, msgs, n: int, d: int):
+        return 0.0
 
 
 class StatelessDownlink:
@@ -259,6 +305,11 @@ class StatelessDownlink:
     def distribute(self, ctx, update, theta, theta_hat):
         res, _ = self.step_down(ctx, EMPTY_STATE, update, theta, theta_hat)
         return res
+
+    def distribute_wire(self, ctx, update, theta, theta_hat, up_msgs):
+        res, _, msgs = self.encode_down(ctx, EMPTY_STATE, update, theta,
+                                        theta_hat, up_msgs)
+        return res, msgs
 
     def flush_step(self, state, n: int, d: int):
         return 0.0, 0.0, state
@@ -286,7 +337,10 @@ class MRCFixedChannel(StatelessUplink):
     chunk: int = 16
     logw_fn: Any = None
 
-    def step_up(self, ctx, state, payload, priors):
+    def _transmit(self, ctx, payload, priors):
+        """Shared core: returns (indices, q_hat, bits).  ``step_up`` drops
+        the indices (dead code under the fused scan); the wire codec
+        serializes them."""
         plan = ctx.plan
         kt = ctx.key
         qb = to_blocks(clip01(payload), plan.size)   # (n_act, B, S)
@@ -294,18 +348,53 @@ class MRCFixedChannel(StatelessUplink):
         sels = _vfold(jax.random.fold_in(kt, TAG_UL_SELECT), ctx.active_ids)
 
         def one(skey, sel, q_i, p_i):
-            _, q_hat_b = mrc.transmit_fixed(
+            return mrc.transmit_fixed(
                 skey, sel, q_i, p_i, n_is=self.n_is, n_samples=self.n_samples,
                 chunk=self.chunk, logw_fn=self.logw_fn)
-            return q_hat_b
 
         if self.shared:
-            q_hat_b = jax.vmap(lambda sel, q, p: one(kt, sel, q, p))(sels, qb, pb)
+            idxs, q_hat_b = jax.vmap(
+                lambda sel, q, p: one(kt, sel, q, p))(sels, qb, pb)
         else:
             skeys = _vclient_keys(kt, ctx.active_ids)
-            q_hat_b = jax.vmap(one)(skeys, sels, qb, pb)
+            idxs, q_hat_b = jax.vmap(one)(skeys, sels, qb, pb)
         bits = ctx.n_active * self.n_samples * plan.billable * math.log2(self.n_is)
-        return from_blocks(q_hat_b, ctx.d), bits, state
+        return idxs, from_blocks(q_hat_b, ctx.d), bits
+
+    def step_up(self, ctx, state, payload, priors):
+        _, q_hat, bits = self._transmit(ctx, payload, priors)
+        return q_hat, bits, state
+
+    # -- wire codec --------------------------------------------------------
+
+    def encode_up(self, ctx, state, payload, priors):
+        idxs, q_hat, bits = self._transmit(ctx, payload, priors)
+        idxs = np.asarray(idxs)  # (n_act, n_samples, B)
+        msgs = []
+        for j, cid in enumerate(np.asarray(ctx.active)):
+            w = BitWriter()
+            wcodecs.put_indices(w, idxs[j], self.n_is)
+            msgs.append(_wire_msg(DIR_UP, cid, SERVER, w))
+        return q_hat, bits, state, msgs
+
+    def decode_up(self, ctx, msgs, priors):
+        plan, kt = ctx.plan, ctx.key
+        pb = to_blocks(clip01(priors), plan.size)
+        shape = (self.n_samples, plan.n_blocks)
+        idxs = []
+        for m in msgs:
+            r = _wire_reader(m)
+            idxs.append(wcodecs.get_indices(r, shape, self.n_is))
+            r.expect_exhausted()
+        idxs = jnp.asarray(np.stack(idxs))
+        if self.shared:
+            q_hat_b = jax.vmap(lambda idx, p: mrc.receive_fixed(
+                kt, idx, p, n_is=self.n_is))(idxs, pb)
+        else:
+            skeys = _vclient_keys(kt, ctx.active_ids)
+            q_hat_b = jax.vmap(lambda k, idx, p: mrc.receive_fixed(
+                k, idx, p, n_is=self.n_is))(skeys, idxs, pb)
+        return from_blocks(q_hat_b, ctx.d)
 
 
 @dataclass
@@ -316,26 +405,61 @@ class MRCAdaptiveChannel(StatelessUplink):
     n_samples: int = 1
     shared: bool = True
 
-    def step_up(self, ctx, state, payload, priors):
+    def _transmit(self, ctx, payload, priors):
         plan = ctx.plan
         kt = ctx.key
         seg = jnp.asarray(plan.seg_ids)
         sels = _vfold(jax.random.fold_in(kt, TAG_UL_SELECT), ctx.active_ids)
 
         def one(skey, sel, q_i, p_i):
-            _, q_hat = mrc.transmit_segments(
+            return mrc.transmit_segments(
                 skey, sel, q_i, clip01(p_i), seg, n_is=self.n_is,
                 n_seg=plan.n_blocks, n_samples=self.n_samples)
-            return q_hat
 
         q = clip01(payload)
         if self.shared:
-            q_hat = jax.vmap(lambda sel, q_i, p: one(kt, sel, q_i, p))(sels, q, priors)
+            idxs, q_hat = jax.vmap(
+                lambda sel, q_i, p: one(kt, sel, q_i, p))(sels, q, priors)
         else:
             skeys = _vclient_keys(kt, ctx.active_ids)
-            q_hat = jax.vmap(one)(skeys, sels, q, priors)
+            idxs, q_hat = jax.vmap(one)(skeys, sels, q, priors)
         bits = ctx.n_active * self.n_samples * plan.billable * math.log2(self.n_is)
+        return idxs, q_hat, bits
+
+    def step_up(self, ctx, state, payload, priors):
+        _, q_hat, bits = self._transmit(ctx, payload, priors)
         return q_hat, bits, state
+
+    # -- wire codec --------------------------------------------------------
+
+    def encode_up(self, ctx, state, payload, priors):
+        idxs, q_hat, bits = self._transmit(ctx, payload, priors)
+        idxs = np.asarray(idxs)  # (n_act, n_samples, n_seg)
+        msgs = []
+        for j, cid in enumerate(np.asarray(ctx.active)):
+            w = BitWriter()
+            wcodecs.put_indices(w, idxs[j], self.n_is)
+            msgs.append(_wire_msg(DIR_UP, cid, SERVER, w))
+        return q_hat, bits, state, msgs
+
+    def decode_up(self, ctx, msgs, priors):
+        plan, kt = ctx.plan, ctx.key
+        seg = jnp.asarray(plan.seg_ids)
+        shape = (self.n_samples, plan.n_blocks)
+        idxs = []
+        for m in msgs:
+            r = _wire_reader(m)
+            idxs.append(wcodecs.get_indices(r, shape, self.n_is))
+            r.expect_exhausted()
+        idxs = jnp.asarray(np.stack(idxs))
+        if self.shared:
+            q_hat = jax.vmap(lambda idx, p: mrc.receive_segments(
+                kt, idx, clip01(p), seg, n_is=self.n_is))(idxs, priors)
+        else:
+            skeys = _vclient_keys(kt, ctx.active_ids)
+            q_hat = jax.vmap(lambda k, idx, p: mrc.receive_segments(
+                k, idx, clip01(p), seg, n_is=self.n_is))(skeys, idxs, priors)
+        return q_hat
 
 
 @dataclass
@@ -354,7 +478,7 @@ class QuantizedMRCUplink(StatelessUplink):
     logw_fn: Any = None
     side_info_bits: float = FLOAT_BITS
 
-    def step_up(self, ctx, state, payload, priors):
+    def _transmit(self, ctx, payload, priors):
         plan = ctx.plan
         kt = ctx.key
         d = ctx.d
@@ -368,15 +492,57 @@ class QuantizedMRCUplink(StatelessUplink):
 
         def one(sel, delta, K):
             q_i = clip01(jax.nn.sigmoid(delta / K))
-            _, q_hat_b = mrc.transmit_fixed(
+            idx, q_hat_b = mrc.transmit_fixed(
                 kt, sel, to_blocks(q_i, plan.size), p_blocks, n_is=self.n_is,
                 n_samples=self.n_samples, chunk=self.chunk, logw_fn=self.logw_fn)
-            return (2.0 * from_blocks(q_hat_b, d) - 1.0) * K
+            return idx, (2.0 * from_blocks(q_hat_b, d) - 1.0) * K
 
-        g_hat = jax.vmap(one)(sels, payload, Ks)
+        idxs, g_hat = jax.vmap(one)(sels, payload, Ks)
         bits = ctx.n_active * (self.n_samples * plan.billable * math.log2(self.n_is)
                                + self.side_info_bits)
+        return idxs, Ks, g_hat, bits
+
+    def step_up(self, ctx, state, payload, priors):
+        _, _, g_hat, bits = self._transmit(ctx, payload, priors)
         return g_hat, bits, state
+
+    # -- wire codec --------------------------------------------------------
+    # Payload per client: the f32 temperature K (the booked 32-bit side
+    # information), then the MRC index stream.
+
+    def encode_up(self, ctx, state, payload, priors):
+        if self.side_info_bits != FLOAT_BITS:
+            raise NotImplementedError(
+                "wire codec encodes K as one f32; side_info_bits="
+                f"{self.side_info_bits} cannot be serialized at that rate")
+        idxs, Ks, g_hat, bits = self._transmit(ctx, payload, priors)
+        idxs, Ks = np.asarray(idxs), np.asarray(Ks)
+        msgs = []
+        for j, cid in enumerate(np.asarray(ctx.active)):
+            w = BitWriter()
+            w.write_f32(Ks[j])
+            wcodecs.put_indices(w, idxs[j], self.n_is)
+            msgs.append(_wire_msg(DIR_UP, cid, SERVER, w))
+        return g_hat, bits, state, msgs
+
+    def decode_up(self, ctx, msgs, priors):
+        plan, kt, d = ctx.plan, ctx.key, ctx.d
+        p_blocks = jnp.full((plan.n_blocks, plan.size), 0.5, jnp.float32)
+        shape = (self.n_samples, plan.n_blocks)
+        Ks, idxs = [], []
+        for m in msgs:
+            r = _wire_reader(m)
+            Ks.append(r.read_f32())
+            idxs.append(wcodecs.get_indices(r, shape, self.n_is))
+            r.expect_exhausted()
+        Ks = jnp.asarray(np.stack(Ks))
+        idxs = jnp.asarray(np.stack(idxs))
+
+        def one(idx, K):
+            q_hat_b = mrc.receive_fixed(kt, idx, p_blocks, n_is=self.n_is)
+            return (2.0 * from_blocks(q_hat_b, d) - 1.0) * K
+
+        return jax.vmap(one)(idxs, Ks)
 
 
 # ---------------------------------------------------------------------------
@@ -406,6 +572,46 @@ class IndexRelayDownlink(StatelessDownlink):
                               * math.log2(self.n_is) + self.side_info_bits)
         return DownlinkResult(th, jnp.tile(th[None], (n, 1)), bits), state
 
+    # -- wire codec --------------------------------------------------------
+    # The relay's payloads ARE the uplink payloads: each client receives the
+    # (n-1) other clients' frames verbatim (for CFL those frames already
+    # carry the K side information the channel books).
+
+    def encode_down(self, ctx, state, update, theta, theta_hat, up_msgs):
+        res, state = self.step_down(ctx, state, update, theta, theta_hat)
+        if len(up_msgs) != ctx.n_clients:
+            raise ValueError("index relay needs every client's uplink frame")
+        msgs = []
+        for rcpt in np.asarray(ctx.active):
+            for m in up_msgs:
+                if m.sender == int(rcpt):
+                    continue
+                msgs.append(Message(direction=DIR_DOWN, sender=m.sender,
+                                    recipient=int(rcpt), payload=m.payload,
+                                    payload_bits=m.payload_bits))
+        return res, state, msgs
+
+    def decode_down(self, ctx, msgs, theta, theta_hat, env: WireEnv):
+        """Reconstruct through the *first* client's receive path: its own
+        transmission plus the n-1 relays, decoded with the shared uplink
+        codec and re-aggregated -- with common candidates this must land on
+        exactly the server's model."""
+        n = ctx.n_clients
+        ref = int(np.asarray(ctx.active)[0])
+        by_sender = {m.sender: m for m in msgs if m.recipient == ref}
+        ordered = []
+        for cid in np.asarray(ctx.active):
+            if int(cid) == ref:
+                own = [m for m in env.up_msgs if m.sender == ref]
+                ordered.append(own[0])
+            else:
+                ordered.append(by_sender[int(cid)])
+        up_out = env.uplink.decode_up(ctx, ordered, env.priors)
+        th = env.aggregator(ctx, theta, up_out).theta
+        bits = n * (n - 1) * (self.n_samples * ctx.plan.billable
+                              * math.log2(self.n_is) + self.side_info_bits)
+        return DownlinkResult(th, jnp.tile(th[None], (n, 1)), bits)
+
 
 @dataclass
 class MRCBroadcastDownlink(StatelessDownlink):
@@ -418,25 +624,70 @@ class MRCBroadcastDownlink(StatelessDownlink):
     logw_fn: Any = None
     broadcast_shareable: bool = True
 
-    def step_down(self, ctx, state, update, theta, theta_hat):
+    def _transmit(self, ctx, update, theta_hat):
         kt, plan, d = ctx.key, ctx.plan, ctx.d
         skey = jax.random.fold_in(kt, TAG_DL_SHARED)
         sel = jax.random.fold_in(kt, TAG_DL_SELECT_COMMON)
         p_common = clip01(theta_hat[0])
         tgt = update.theta
         if plan.adaptive:
-            _, est = mrc.transmit_segments(
+            idxs, est = mrc.transmit_segments(
                 skey, sel, tgt, p_common, jnp.asarray(plan.seg_ids),
                 n_is=self.n_is, n_seg=plan.n_blocks, n_samples=self.n_samples)
         else:
-            _, est_b = mrc.transmit_fixed(
+            idxs, est_b = mrc.transmit_fixed(
                 skey, sel, to_blocks(tgt, plan.size), to_blocks(p_common, plan.size),
                 n_is=self.n_is, n_samples=self.n_samples, chunk=self.chunk,
                 logw_fn=self.logw_fn)
             est = from_blocks(est_b, d)
         bits = ctx.n_clients * self.n_samples * plan.billable * math.log2(self.n_is)
+        return idxs, est, bits
+
+    def step_down(self, ctx, state, update, theta, theta_hat):
+        _, est, bits = self._transmit(ctx, update, theta_hat)
         return DownlinkResult(
-            tgt, jnp.tile(clip01(est)[None], (ctx.n_clients, 1)), bits), state
+            update.theta, jnp.tile(clip01(est)[None], (ctx.n_clients, 1)),
+            bits), state
+
+    # -- wire codec --------------------------------------------------------
+    # One index stream, broadcast: n frames with identical payload (the
+    # channel bills per client, so the stream totals match by construction).
+
+    def encode_down(self, ctx, state, update, theta, theta_hat, up_msgs):
+        idxs, est, bits = self._transmit(ctx, update, theta_hat)
+        w = BitWriter()
+        wcodecs.put_indices(w, np.asarray(idxs), self.n_is)
+        payload, nbits = w.getvalue(), w.bits_written
+        msgs = [Message(direction=DIR_DOWN, sender=SERVER, recipient=int(cid),
+                        payload=payload, payload_bits=nbits)
+                for cid in np.asarray(ctx.active)]
+        res = DownlinkResult(
+            update.theta, jnp.tile(clip01(est)[None], (ctx.n_clients, 1)),
+            bits)
+        return res, state, msgs
+
+    def decode_down(self, ctx, msgs, theta, theta_hat, env: WireEnv):
+        kt, plan, d = ctx.key, ctx.plan, ctx.d
+        skey = jax.random.fold_in(kt, TAG_DL_SHARED)
+        r = _wire_reader(msgs[0])
+        idxs = wcodecs.get_indices(
+            r, (self.n_samples, plan.n_blocks), self.n_is)
+        r.expect_exhausted()
+        idxs = jnp.asarray(idxs)
+        p_common = clip01(theta_hat[0])
+        if plan.adaptive:
+            est = mrc.receive_segments(skey, idxs, p_common,
+                                       jnp.asarray(plan.seg_ids),
+                                       n_is=self.n_is)
+        else:
+            est_b = mrc.receive_fixed(skey, idxs,
+                                      to_blocks(p_common, plan.size),
+                                      n_is=self.n_is)
+            est = from_blocks(est_b, d)
+        bits = ctx.n_clients * self.n_samples * plan.billable * math.log2(self.n_is)
+        return DownlinkResult(
+            env.update.theta,
+            jnp.tile(clip01(est)[None], (ctx.n_clients, 1)), bits)
 
 
 @dataclass
@@ -451,7 +702,7 @@ class MRCPrivateDownlink(StatelessDownlink):
     logw_fn: Any = None
     broadcast_shareable: bool = False
 
-    def step_down(self, ctx, state, update, theta, theta_hat):
+    def _transmit(self, ctx, update, theta_hat):
         kt, plan, d = ctx.key, ctx.plan, ctx.d
         ids = ctx.active_ids
         skeys = jax.vmap(lambda k: jax.random.fold_in(k, TAG_DL_SHARED))(
@@ -463,23 +714,64 @@ class MRCPrivateDownlink(StatelessDownlink):
             seg = jnp.asarray(plan.seg_ids)
 
             def one(skey, sel, p_i):
-                _, est = mrc.transmit_segments(
+                return mrc.transmit_segments(
                     skey, sel, tgt, p_i, seg, n_is=self.n_is,
                     n_seg=plan.n_blocks, n_samples=self.n_samples)
-                return est
         else:
             tb = to_blocks(tgt, plan.size)
 
             def one(skey, sel, p_i):
-                _, est_b = mrc.transmit_fixed(
+                idx, est_b = mrc.transmit_fixed(
                     skey, sel, tb, to_blocks(p_i, plan.size), n_is=self.n_is,
                     n_samples=self.n_samples, chunk=self.chunk, logw_fn=self.logw_fn)
-                return from_blocks(est_b, d)
+                return idx, from_blocks(est_b, d)
 
-        est = jax.vmap(one)(skeys, sels, priors)
-        theta_hat = theta_hat.at[ids].set(clip01(est))
+        idxs, est = jax.vmap(one)(skeys, sels, priors)
         bits = ctx.n_active * self.n_samples * plan.billable * math.log2(self.n_is)
-        return DownlinkResult(tgt, theta_hat, bits), state
+        return idxs, est, bits
+
+    def step_down(self, ctx, state, update, theta, theta_hat):
+        _, est, bits = self._transmit(ctx, update, theta_hat)
+        theta_hat = theta_hat.at[ctx.active_ids].set(clip01(est))
+        return DownlinkResult(update.theta, theta_hat, bits), state
+
+    # -- wire codec --------------------------------------------------------
+
+    def encode_down(self, ctx, state, update, theta, theta_hat, up_msgs):
+        idxs, est, bits = self._transmit(ctx, update, theta_hat)
+        idxs = np.asarray(idxs)  # (n_act, n_samples, B)
+        msgs = []
+        for j, cid in enumerate(np.asarray(ctx.active)):
+            w = BitWriter()
+            wcodecs.put_indices(w, idxs[j], self.n_is)
+            msgs.append(_wire_msg(DIR_DOWN, SERVER, cid, w))
+        new_hat = theta_hat.at[ctx.active_ids].set(clip01(est))
+        return DownlinkResult(update.theta, new_hat, bits), state, msgs
+
+    def decode_down(self, ctx, msgs, theta, theta_hat, env: WireEnv):
+        kt, plan, d = ctx.key, ctx.plan, ctx.d
+        ids = ctx.active_ids
+        skeys = jax.vmap(lambda k: jax.random.fold_in(k, TAG_DL_SHARED))(
+            _vclient_keys(kt, ids))
+        priors = clip01(theta_hat[ids])
+        shape = (self.n_samples, plan.n_blocks)
+        idxs = []
+        for m in msgs:
+            r = _wire_reader(m)
+            idxs.append(wcodecs.get_indices(r, shape, self.n_is))
+            r.expect_exhausted()
+        idxs = jnp.asarray(np.stack(idxs))
+        if plan.adaptive:
+            seg = jnp.asarray(plan.seg_ids)
+            est = jax.vmap(lambda k, idx, p: mrc.receive_segments(
+                k, idx, p, seg, n_is=self.n_is))(skeys, idxs, priors)
+        else:
+            est = jax.vmap(lambda k, idx, p: from_blocks(mrc.receive_fixed(
+                k, idx, to_blocks(p, plan.size), n_is=self.n_is), d))(
+                    skeys, idxs, priors)
+        new_hat = theta_hat.at[ids].set(clip01(est))
+        bits = ctx.n_active * self.n_samples * plan.billable * math.log2(self.n_is)
+        return DownlinkResult(env.update.theta, new_hat, bits)
 
 
 @dataclass
@@ -499,18 +791,23 @@ class SplitBlockDownlink(StatelessDownlink):
     logw_fn: Any = None
     broadcast_shareable: bool = False
 
-    def step_down(self, ctx, state, update, theta, theta_hat):
-        kt, plan, d = ctx.key, ctx.plan, ctx.d
-        if plan.adaptive:
-            raise NotImplementedError("SplitDL is defined on fixed blocks")
-        n, size, n_blocks = ctx.n_clients, plan.size, plan.n_blocks
+    @staticmethod
+    def _ownership(n: int, n_blocks: int):
+        """Padded interleaved block-ownership table and its sentinel row."""
         max_len = -(-n_blocks // n)
-        # Padded ownership table; sentinel index n_blocks targets a dummy row.
         own_pad = np.full((n, max_len), n_blocks, np.int32)
         for i in range(n):
             own = np.arange(i, n_blocks, n, dtype=np.int32)
             own_pad[i, :len(own)] = own
-        own_pad = jnp.asarray(own_pad)
+        return jnp.asarray(own_pad), max_len
+
+    def _transmit(self, ctx, update, theta_hat):
+        kt, plan, d = ctx.key, ctx.plan, ctx.d
+        if plan.adaptive:
+            raise NotImplementedError("SplitDL is defined on fixed blocks")
+        n, size, n_blocks = ctx.n_clients, plan.size, plan.n_blocks
+        # Sentinel index n_blocks targets a dummy row.
+        own_pad, max_len = self._ownership(n, n_blocks)
 
         tb = to_blocks(update.theta, size)                       # (B, S)
         dummy = jnp.full((1, size), 0.5, tb.dtype)
@@ -524,15 +821,61 @@ class SplitBlockDownlink(StatelessDownlink):
 
         def one(skey, sel, hb_i, own_i):
             hb_ext = jnp.concatenate([hb_i, dummy])
-            _, est_b = mrc.transmit_fixed(
+            idx, est_b = mrc.transmit_fixed(
                 skey, sel, tb_ext[own_i], hb_ext[own_i], n_is=self.n_is,
                 n_samples=self.n_samples, chunk=chunk, logw_fn=self.logw_fn)
             hb_ext = hb_ext.at[own_i].set(clip01(est_b))
+            return idx, from_blocks(hb_ext[:n_blocks], d)
+
+        idxs, theta_hat = jax.vmap(one)(skeys, sels, hb_all, own_pad)
+        bits = n * self.n_samples * max_len * math.log2(self.n_is)
+        return idxs, theta_hat, bits
+
+    def step_down(self, ctx, state, update, theta, theta_hat):
+        _, theta_hat, bits = self._transmit(ctx, update, theta_hat)
+        return DownlinkResult(update.theta, theta_hat, bits), state
+
+    # -- wire codec --------------------------------------------------------
+    # Per client: indices for its (padded) owned-block subset, sentinel
+    # included -- the channel bills the padding, so the wire carries it.
+
+    def encode_down(self, ctx, state, update, theta, theta_hat, up_msgs):
+        idxs, new_hat, bits = self._transmit(ctx, update, theta_hat)
+        idxs = np.asarray(idxs)  # (n, n_samples, max_len)
+        msgs = []
+        for j, cid in enumerate(np.asarray(ctx.active)):
+            w = BitWriter()
+            wcodecs.put_indices(w, idxs[j], self.n_is)
+            msgs.append(_wire_msg(DIR_DOWN, SERVER, cid, w))
+        return DownlinkResult(update.theta, new_hat, bits), state, msgs
+
+    def decode_down(self, ctx, msgs, theta, theta_hat, env: WireEnv):
+        kt, plan, d = ctx.key, ctx.plan, ctx.d
+        n, size, n_blocks = ctx.n_clients, plan.size, plan.n_blocks
+        own_pad, max_len = self._ownership(n, n_blocks)
+        dummy = jnp.full((1, size), 0.5, jnp.float32)
+        hb_all = to_blocks(clip01(theta_hat), size)
+        ids = jnp.arange(n, dtype=jnp.int32)
+        skeys = jax.vmap(lambda k: jax.random.fold_in(k, TAG_DL_SHARED))(
+            _vclient_keys(kt, ids))
+        shape = (self.n_samples, max_len)
+        idxs = []
+        for m in msgs:
+            r = _wire_reader(m)
+            idxs.append(wcodecs.get_indices(r, shape, self.n_is))
+            r.expect_exhausted()
+        idxs = jnp.asarray(np.stack(idxs))
+
+        def one(skey, idx, hb_i, own_i):
+            hb_ext = jnp.concatenate([hb_i, dummy])
+            est_b = mrc.receive_fixed(skey, idx, hb_ext[own_i],
+                                      n_is=self.n_is)
+            hb_ext = hb_ext.at[own_i].set(clip01(est_b))
             return from_blocks(hb_ext[:n_blocks], d)
 
-        theta_hat = jax.vmap(one)(skeys, sels, hb_all, own_pad)
+        new_hat = jax.vmap(one)(skeys, idxs, hb_all, own_pad)
         bits = n * self.n_samples * max_len * math.log2(self.n_is)
-        return DownlinkResult(update.theta, theta_hat, bits), state
+        return DownlinkResult(env.update.theta, new_hat, bits)
 
 
 # ---------------------------------------------------------------------------
@@ -562,6 +905,66 @@ class DenseChannel(StatelessUplink, StatelessDownlink):
     def flush(self, n, d):
         return 0.0, n * d * self.bits_per_value
 
+    # -- wire codec: raw big-endian f32 vectors ----------------------------
+
+    def _check_rate(self):
+        if self.bits_per_value != FLOAT_BITS:
+            raise NotImplementedError(
+                f"dense wire codec is f32-only ({self.bits_per_value} "
+                "bits/value requested)")
+
+    def encode_up(self, ctx, state, payload, priors):
+        self._check_rate()
+        rows = np.asarray(payload)
+        msgs = []
+        for j, cid in enumerate(np.asarray(ctx.active)):
+            w = BitWriter()
+            wcodecs.put_dense(w, rows[j])
+            msgs.append(_wire_msg(DIR_UP, cid, SERVER, w))
+        return payload, ctx.n_active * ctx.d * self.bits_per_value, state, msgs
+
+    def decode_up(self, ctx, msgs, priors):
+        rows = []
+        for m in msgs:
+            r = _wire_reader(m)
+            rows.append(wcodecs.get_dense(r, ctx.d))
+            r.expect_exhausted()
+        return jnp.asarray(np.stack(rows))
+
+    def encode_down(self, ctx, state, update, theta, theta_hat, up_msgs):
+        self._check_rate()
+        res, state = self.step_down(ctx, state, update, theta, theta_hat)
+        w = BitWriter()
+        wcodecs.put_dense(w, np.asarray(update.theta))
+        payload, nbits = w.getvalue(), w.bits_written
+        msgs = [Message(direction=DIR_DOWN, sender=SERVER, recipient=int(cid),
+                        payload=payload, payload_bits=nbits)
+                for cid in range(ctx.n_clients)]
+        return res, state, msgs
+
+    def decode_down(self, ctx, msgs, theta, theta_hat, env: WireEnv):
+        r = _wire_reader(msgs[0])
+        th = jnp.asarray(wcodecs.get_dense(r, ctx.d))
+        r.expect_exhausted()
+        return DownlinkResult(th, jnp.tile(th[None], (ctx.n_clients, 1)),
+                              ctx.n_clients * ctx.d * self.bits_per_value)
+
+    def flush_wire(self, n, d):
+        # Dense channels hold no EF memory: the sync uplink is the zero
+        # residual, serialized at the billed dense rate.
+        self._check_rate()
+        r, bits = self.flush(n, d)
+        msgs = []
+        for cid in range(n):
+            w = BitWriter()
+            wcodecs.put_dense(w, np.zeros(d, np.float32))
+            msgs.append(_wire_msg(DIR_FLUSH_UP, cid, SERVER, w))
+        return r, bits, msgs
+
+    def decode_flush_up(self, msgs, n, d):
+        rows = [wcodecs.get_dense(_wire_reader(m), d) for m in msgs]
+        return jnp.mean(jnp.asarray(np.stack(rows)), axis=0)
+
 
 @dataclass
 class SignEFChannel:
@@ -577,10 +980,25 @@ class SignEFChannel:
     broadcast_shareable: bool = True
     _e: Optional[jax.Array] = field(default=None, repr=False)
 
+    def _compress_passes(self, v):
+        """Iterated sign compression, also yielding the per-pass wire
+        payload: (scale, sign-bit vector) per pass.  The reconstruction
+        ``sum_r scale_r * (+-1)`` is exactly what ``_compress`` computes
+        (``sign_compress`` is scale * where(v >= 0, 1, -1))."""
+        comps = []
+        c = None
+        resid = v
+        for _ in range(self.passes):
+            scale = jnp.mean(jnp.abs(resid))
+            sgn = resid >= 0
+            step = sign_compress(resid)  # == scale * where(sgn, 1, -1)
+            c = step if c is None else c + step
+            resid = v - c
+            comps.append((scale, sgn))
+        return c, comps
+
     def _compress(self, v):
-        c = sign_compress(v)
-        for _ in range(self.passes - 1):
-            c = c + sign_compress(v - c)
+        c, _ = self._compress_passes(v)
         return c
 
     # -- functional core --------------------------------------------------
@@ -611,6 +1029,67 @@ class SignEFChannel:
         r = jnp.mean(e, axis=0) if e.ndim == 2 else e
         return r, n * d * FLOAT_BITS, jnp.zeros_like(e)
 
+    # -- wire codec --------------------------------------------------------
+    # Per client (uplink) / broadcast (downlink): ``passes`` records of one
+    # f32 scale + a d-bit sign bitmap -- the booked passes * (d + 32).
+
+    def _decode_compressed(self, r, d):
+        c = None
+        for _ in range(self.passes):
+            scale, sgn = wcodecs.get_sign_pass(r, d)
+            step = jnp.float32(scale) * jnp.where(jnp.asarray(sgn), 1.0, -1.0)
+            c = step if c is None else c + step
+        return c
+
+    def encode_up(self, ctx, e, payload, priors):
+        if ctx.n_active != ctx.n_clients:
+            raise ValueError("error-feedback uplinks require full participation")
+        acc = payload + e
+        c, comps = jax.vmap(self._compress_passes)(acc)
+        bits = ctx.n_clients * self.passes * (ctx.d + FLOAT_BITS)
+        msgs = []
+        for j, cid in enumerate(np.asarray(ctx.active)):
+            w = BitWriter()
+            for scale, sgn in comps:
+                wcodecs.put_sign_pass(w, np.asarray(scale)[j],
+                                      np.asarray(sgn)[j])
+            msgs.append(_wire_msg(DIR_UP, cid, SERVER, w))
+        return c, bits, acc - c, msgs
+
+    def decode_up(self, ctx, msgs, priors):
+        rows = []
+        for m in msgs:
+            r = _wire_reader(m)
+            rows.append(self._decode_compressed(r, ctx.d))
+            r.expect_exhausted()
+        return jnp.stack(rows)
+
+    def encode_down(self, ctx, e, update, theta, theta_hat, up_msgs):
+        g = update.delta if update.delta is not None \
+            else (theta - update.theta) / update.lr
+        agg = g + e
+        c_s, comps = self._compress_passes(agg)
+        bits = ctx.n_clients * self.passes * (ctx.d + FLOAT_BITS)
+        w = BitWriter()
+        for scale, sgn in comps:
+            wcodecs.put_sign_pass(w, np.asarray(scale), np.asarray(sgn))
+        payload, nbits = w.getvalue(), w.bits_written
+        msgs = [Message(direction=DIR_DOWN, sender=SERVER, recipient=int(cid),
+                        payload=payload, payload_bits=nbits)
+                for cid in range(ctx.n_clients)]
+        res = DownlinkResult(theta - update.lr * c_s,
+                             theta_hat - update.lr * c_s[None, :], bits)
+        return res, agg - c_s, msgs
+
+    def decode_down(self, ctx, msgs, theta, theta_hat, env: WireEnv):
+        r = _wire_reader(msgs[0])
+        c_s = self._decode_compressed(r, ctx.d)
+        r.expect_exhausted()
+        lr = env.update.lr
+        bits = ctx.n_clients * self.passes * (ctx.d + FLOAT_BITS)
+        return DownlinkResult(theta - lr * c_s,
+                              theta_hat - lr * c_s[None, :], bits)
+
     # -- object shell ------------------------------------------------------
     def transmit(self, ctx, payload, priors):
         if self._e is None:
@@ -618,17 +1097,47 @@ class SignEFChannel:
         out, bits, self._e = self.step_up(ctx, self._e, payload, priors)
         return out, bits
 
+    def transmit_wire(self, ctx, payload, priors):
+        if self._e is None:
+            self._e = jnp.zeros_like(payload)
+        out, bits, self._e, msgs = self.encode_up(ctx, self._e, payload,
+                                                  priors)
+        return out, bits, msgs
+
     def distribute(self, ctx, update, theta, theta_hat):
         if self._e is None:
             self._e = jnp.zeros_like(theta)
         res, self._e = self.step_down(ctx, self._e, update, theta, theta_hat)
         return res
 
+    def distribute_wire(self, ctx, update, theta, theta_hat, up_msgs):
+        if self._e is None:
+            self._e = jnp.zeros_like(theta)
+        res, self._e, msgs = self.encode_down(ctx, self._e, update, theta,
+                                              theta_hat, up_msgs)
+        return res, msgs
+
     def flush(self, n, d):
         if self._e is None:
             return 0.0, n * d * FLOAT_BITS
         r, bits, self._e = self.flush_step(self._e, n, d)
         return r, bits
+
+    def flush_wire(self, n, d):
+        """Uplink EF sync: every client uploads its dense residual row."""
+        e = self._e if self._e is not None else jnp.zeros((n, d), jnp.float32)
+        rows = np.asarray(e if e.ndim == 2 else jnp.tile(e[None], (n, 1)))
+        msgs = []
+        for cid in range(n):
+            w = BitWriter()
+            wcodecs.put_dense(w, rows[cid])
+            msgs.append(_wire_msg(DIR_FLUSH_UP, cid, SERVER, w))
+        r, bits = self.flush(n, d)
+        return r, bits, msgs
+
+    def decode_flush_up(self, msgs, n, d):
+        rows = [wcodecs.get_dense(_wire_reader(m), d) for m in msgs]
+        return jnp.mean(jnp.asarray(np.stack(rows)), axis=0)
 
     def reset(self):
         self._e = None
@@ -655,6 +1164,38 @@ class TopKEFChannel:
     def flush_step(self, e, n, d):
         return jnp.mean(e, axis=0), n * d * FLOAT_BITS, jnp.zeros_like(e)
 
+    # -- wire codec --------------------------------------------------------
+    # Per client: k records of (ceil(log2 d)-bit index, f32 value) -- the
+    # booked topk_bits(d, k).
+
+    def encode_up(self, ctx, e, payload, priors):
+        if ctx.n_active != ctx.n_clients:
+            raise ValueError("error-feedback uplinks require full participation")
+        acc = payload + e
+        kk = min(self.k, ctx.d)
+        _, idxs = jax.vmap(lambda v: jax.lax.top_k(jnp.abs(v), kk))(acc)
+        vals = jnp.take_along_axis(acc, idxs, axis=1)
+        c = jax.vmap(lambda v: topk_compress(v, self.k))(acc)
+        bits = ctx.n_clients * topk_bits(ctx.d, self.k)
+        msgs = []
+        for j, cid in enumerate(np.asarray(ctx.active)):
+            w = BitWriter()
+            wcodecs.put_topk(w, np.asarray(idxs)[j], np.asarray(vals)[j],
+                             ctx.d)
+            msgs.append(_wire_msg(DIR_UP, cid, SERVER, w))
+        return c, bits, acc - c, msgs
+
+    def decode_up(self, ctx, msgs, priors):
+        kk = min(self.k, ctx.d)
+        rows = []
+        for m in msgs:
+            r = _wire_reader(m)
+            idx, vals = wcodecs.get_topk(r, kk, ctx.d)
+            r.expect_exhausted()
+            rows.append(jnp.zeros(ctx.d, jnp.float32)
+                        .at[jnp.asarray(idx)].set(jnp.asarray(vals)))
+        return jnp.stack(rows)
+
     # -- object shell ------------------------------------------------------
     def transmit(self, ctx, payload, priors):
         if self._e is None:
@@ -662,11 +1203,33 @@ class TopKEFChannel:
         out, bits, self._e = self.step_up(ctx, self._e, payload, priors)
         return out, bits
 
+    def transmit_wire(self, ctx, payload, priors):
+        if self._e is None:
+            self._e = jnp.zeros_like(payload)
+        out, bits, self._e, msgs = self.encode_up(ctx, self._e, payload,
+                                                  priors)
+        return out, bits, msgs
+
     def flush(self, n, d):
         if self._e is None:
             return 0.0, n * d * FLOAT_BITS
         r, bits, self._e = self.flush_step(self._e, n, d)
         return r, bits
+
+    def flush_wire(self, n, d):
+        e = self._e if self._e is not None else jnp.zeros((n, d), jnp.float32)
+        rows = np.asarray(e)
+        msgs = []
+        for cid in range(n):
+            w = BitWriter()
+            wcodecs.put_dense(w, rows[cid])
+            msgs.append(_wire_msg(DIR_FLUSH_UP, cid, SERVER, w))
+        r, bits = self.flush(n, d)
+        return r, bits, msgs
+
+    def decode_flush_up(self, msgs, n, d):
+        rows = [wcodecs.get_dense(_wire_reader(m), d) for m in msgs]
+        return jnp.mean(jnp.asarray(np.stack(rows)), axis=0)
 
     def reset(self):
         self._e = None
@@ -694,3 +1257,39 @@ class SliceDownlink(StatelessDownlink):
             new_hat.append(theta_hat[i].at[lo:hi].set(th[lo:hi]))
         return DownlinkResult(th, jnp.stack(new_hat),
                               n * (d / n) * FLOAT_BITS), state
+
+    # -- wire codec --------------------------------------------------------
+    # Client i's message carries its dense f32 slice [i*k, hi); the slices
+    # tile [0, d) so the stream totals d * 32 bits == the booked
+    # n * (d/n) * 32 up to float round-off (cf. RECONCILE_REL_TOL).
+
+    def _bounds(self, n, d):
+        k = self.k if self.k is not None else max(d // n, 1)
+        out = []
+        for i in range(n):
+            lo = i * k
+            hi = d if i == n - 1 else min((i + 1) * k, d)
+            out.append((lo, hi))
+        return out
+
+    def encode_down(self, ctx, state, update, theta, theta_hat, up_msgs):
+        res, state = self.step_down(ctx, state, update, theta, theta_hat)
+        th = np.asarray(res.theta)
+        msgs = []
+        for cid, (lo, hi) in enumerate(self._bounds(ctx.n_clients, ctx.d)):
+            w = BitWriter()
+            wcodecs.put_dense(w, th[lo:hi])
+            msgs.append(_wire_msg(DIR_DOWN, SERVER, cid, w))
+        return res, state, msgs
+
+    def decode_down(self, ctx, msgs, theta, theta_hat, env: WireEnv):
+        n, d = ctx.n_clients, ctx.d
+        by_recipient = {m.recipient: m for m in msgs}
+        new_hat = []
+        for cid, (lo, hi) in enumerate(self._bounds(n, d)):
+            r = _wire_reader(by_recipient[cid])
+            sl = wcodecs.get_dense(r, hi - lo)
+            r.expect_exhausted()
+            new_hat.append(theta_hat[cid].at[lo:hi].set(jnp.asarray(sl)))
+        return DownlinkResult(env.update.theta, jnp.stack(new_hat),
+                              n * (d / n) * FLOAT_BITS)

@@ -138,6 +138,13 @@ class FLEngine:
     def __init__(self, task, spec: EngineSpec):
         self.task = task
         self.spec = spec
+        # Fused-program cache (satellite of the wire PR): one compiled
+        # scanned-run program per (rounds, shapes) signature, so repeated
+        # ``run()`` calls -- benchmark sweeps, seed replicates -- stop
+        # retracing the scan body.  Each entry holds the jitted runner and
+        # the trace-time ``booked`` bit record it captured.
+        self._fused_programs: Dict[Any, Any] = {}
+        self.fused_trace_count = 0  # bumped at trace time (regression test)
 
     # -- fused-path eligibility -------------------------------------------
 
@@ -200,10 +207,24 @@ class FLEngine:
 
     def run(self, shards: Dataset, theta0: Optional[jax.Array] = None, *,
             rounds: int, seed: int = 0, eval_every: int = 1,
-            mode: str = "auto", cohort_rng: str = "numpy") -> Dict[str, Any]:
+            mode: str = "auto", cohort_rng: str = "numpy",
+            wire: Optional[str] = None) -> Dict[str, Any]:
         """Run the scheme.  ``mode``: "auto" (fused when eligible), "host",
-        or "fused" (raises for schemes needing the host control plane)."""
+        or "fused" (raises for schemes needing the host control plane).
+
+        ``wire="audit"`` serializes every channel payload through the
+        :mod:`repro.wire` bitstream each round (encode -> decode; the
+        decoded values drive the trajectory, so the run certifies the
+        codecs are lossless) and reconciles the BitMeter against the
+        stream; host-path only.  The report lands in ``out["wire"]`` and
+        the full stream in ``out["wire_session"]``.
+        """
         task, spec = self.task, self.spec
+        if wire not in (None, "audit"):
+            raise ValueError(f"wire={wire!r} (expected None or 'audit')")
+        if wire and mode == "fused":
+            raise ValueError("wire audit runs on the host path; it cannot "
+                             "be combined with mode='fused'")
         # Stateful channels (error-feedback memories) must start fresh: a
         # spec may be run more than once.
         for chan in (spec.uplink, spec.downlink):
@@ -229,10 +250,24 @@ class FLEngine:
                 f"spec {spec.name!r} needs the host control plane "
                 "(non-functional channels, an allocation without the bucket "
                 "API, or a data-dependent plan combined with an EF flush)")
-        fused = fused_ok and mode != "host"
-        runner = self._run_fused if fused else self._run_host
-        out = runner(shards, theta, theta_hat, meter, rounds=rounds,
-                     seed=seed, eval_every=eval_every, schedule=schedule)
+        fused = fused_ok and mode != "host" and not wire
+        if fused:
+            out = self._run_fused(shards, theta, theta_hat, meter,
+                                  rounds=rounds, seed=seed,
+                                  eval_every=eval_every, schedule=schedule)
+        else:
+            session = None
+            if wire:
+                from repro.wire import WireSession, scheme_wire_id
+                session = WireSession(
+                    scheme_id=scheme_wire_id(spec.name or "unnamed"))
+            out = self._run_host(shards, theta, theta_hat, meter,
+                                 rounds=rounds, seed=seed,
+                                 eval_every=eval_every, schedule=schedule,
+                                 session=session)
+            if session is not None:
+                out["wire"] = session.reconcile(meter)
+                out["wire_session"] = session
         out["active_schedule"] = schedule
         out["mode"] = "fused" if fused else "host"
         return out
@@ -240,16 +275,19 @@ class FLEngine:
     # -- host loop ---------------------------------------------------------
 
     def _run_host(self, shards, theta, theta_hat, meter, *, rounds, seed,
-                  eval_every, schedule) -> Dict[str, Any]:
+                  eval_every, schedule, session=None) -> Dict[str, Any]:
         task, spec = self.task, self.spec
         n, d = meter.n_clients, meter.d
         n_active = schedule.shape[1]
         base = jax.random.PRNGKey(seed)
         history: List[Dict[str, float]] = []
+        if session is not None:
+            self._check_wire_support()
 
         for t in range(rounds):
             kt = mrc.round_key(base, t)
             active = schedule[t]
+            msgs = []  # this round's wire traffic (audit mode only)
 
             # ---- local training: only the active cohort ------------------
             train_keys = jax.random.split(jax.random.fold_in(kt, TAG_TRAIN), n)
@@ -271,19 +309,49 @@ class FLEngine:
                 size, n_blocks, seg_ids, overhead = spec.allocation.plan(kl, d)
                 plan = BlockPlan(size=size, n_blocks=n_blocks,
                                  seg_ids=seg_ids, overhead_bits=overhead)
+                if session is not None:
+                    # The plan side information crosses the wire as one CTRL
+                    # frame per client (the meter books overhead_bits * n);
+                    # the decoded plan -- not the host object -- drives the
+                    # round, certifying the header codec.
+                    ctrl = self._encode_plan_msgs(plan, n)
+                    plan = self._decode_plan_msg(ctrl[0], d)
+                    msgs += ctrl
 
             ctx = RoundContext(t=t, key=kt, n_clients=n, d=d, active=active,
                                plan=plan)
 
             # ---- uplink -> aggregate -> downlink -------------------------
-            up_out, ul_bits = spec.uplink.transmit(ctx, payload, priors)
+            if session is None:
+                up_out, ul_bits = spec.uplink.transmit(ctx, payload, priors)
+            else:
+                up_out, ul_bits, up_msgs = spec.uplink.transmit_wire(
+                    ctx, payload, priors)
+                up_out = spec.uplink.decode_up(ctx, up_msgs, priors)
+                msgs += up_msgs
             update = spec.aggregator(ctx, theta, up_out)
-            theta, theta_hat, dl_bits = spec.downlink.distribute(
-                ctx, update, theta, theta_hat)
+            if session is None:
+                theta, theta_hat, dl_bits = spec.downlink.distribute(
+                    ctx, update, theta, theta_hat)
+            else:
+                from .channels import WireEnv
+                _, dn_msgs = spec.downlink.distribute_wire(
+                    ctx, update, theta, theta_hat, up_msgs)
+                env = WireEnv(uplink=spec.uplink, aggregator=spec.aggregator,
+                              priors=priors, up_msgs=up_msgs, update=update)
+                theta, theta_hat, dl_bits = spec.downlink.decode_down(
+                    ctx, dn_msgs, theta, theta_hat, env)
+                msgs += dn_msgs
 
             # ---- periodic EF synchronisation (CSER / LIEC) ---------------
             if spec.sync_period and (t + 1) % spec.sync_period == 0:
-                r_up, b_up = spec.uplink.flush(n, d)
+                if session is None:
+                    r_up, b_up = spec.uplink.flush(n, d)
+                else:
+                    r_up, b_up, fl_msgs = spec.uplink.flush_wire(n, d)
+                    if fl_msgs:
+                        r_up = spec.uplink.decode_flush_up(fl_msgs, n, d)
+                    msgs += fl_msgs
                 r_dn, b_dn = spec.downlink.flush(n, d)
                 # flush at the aggregator's step size (update.lr), so a
                 # hand-built spec cannot desync the reset from the rounds
@@ -291,9 +359,19 @@ class FLEngine:
                 theta_hat = jnp.tile(theta[None], (n, 1))
                 ul_bits += b_up
                 dl_bits += b_dn
+                if session is not None and b_dn:
+                    # The downlink flush re-broadcasts the synced model: n
+                    # dense frames of the post-flush theta, n * d * 32 bits
+                    # == every stateful downlink's booked flush cost.  The
+                    # decoded broadcast drives the trajectory.
+                    fd_msgs, theta = self._flush_down_msgs(theta, n, d, b_dn)
+                    theta_hat = jnp.tile(theta[None], (n, 1))
+                    msgs += fd_msgs
 
             overhead_bits = plan.overhead_bits * n if plan is not None else 0.0
             meter.add_round(ul_bits, dl_bits, overhead_bits=overhead_bits)
+            if session is not None:
+                session.add(msgs, round=t)
 
             if (t + 1) % eval_every == 0 or t == rounds - 1:
                 acc = task.evaluate(theta)
@@ -303,16 +381,68 @@ class FLEngine:
 
         return self._result(history, meter, theta, theta_hat)
 
+    # -- wire-audit helpers ------------------------------------------------
+
+    def _check_wire_support(self) -> None:
+        spec = self.spec
+        missing = [a for a in ("transmit_wire", "decode_up")
+                   if not hasattr(spec.uplink, a)]
+        missing += [a for a in ("distribute_wire", "decode_down")
+                    if not hasattr(spec.downlink, a)]
+        if spec.allocation is not None and not all(
+                hasattr(spec.allocation, a)
+                for a in ("encode_plan", "decode_plan")):
+            missing.append("allocation.encode_plan/decode_plan")
+        if missing:
+            raise ValueError(
+                f"spec {spec.name!r} cannot be wire-audited: missing "
+                f"{missing}")
+
+    def _encode_plan_msgs(self, plan, n):
+        from repro.wire import DIR_CTRL, BitWriter, SERVER, Message
+        w = BitWriter()
+        self.spec.allocation.encode_plan(plan, w)
+        payload, nbits = w.getvalue(), w.bits_written
+        return [Message(direction=DIR_CTRL, sender=cid, recipient=SERVER,
+                        payload=payload, payload_bits=nbits)
+                for cid in range(n)]
+
+    def _decode_plan_msg(self, msg, d):
+        from repro.wire import BitReader
+        r = BitReader(msg.payload, msg.payload_bits)
+        plan = self.spec.allocation.decode_plan(r, d)
+        r.expect_exhausted()
+        return plan
+
+    def _flush_down_msgs(self, theta, n, d, b_dn):
+        from repro.wire import DIR_FLUSH_DOWN, BitWriter, BitReader, \
+            SERVER, Message
+        from repro.wire import codecs as wcodecs
+        if b_dn != n * d * 32:
+            raise ValueError(
+                f"downlink flush books {b_dn} bits; the wire layer only "
+                f"knows the dense re-broadcast protocol ({n * d * 32} bits)")
+        w = BitWriter()
+        wcodecs.put_dense(w, np.asarray(theta))
+        payload, nbits = w.getvalue(), w.bits_written
+        msgs = [Message(direction=DIR_FLUSH_DOWN, sender=SERVER,
+                        recipient=cid, payload=payload, payload_bits=nbits)
+                for cid in range(n)]
+        r = BitReader(msgs[0].payload, msgs[0].payload_bits)
+        theta = jnp.asarray(wcodecs.get_dense(r, d))
+        r.expect_exhausted()
+        return msgs, theta
+
     # -- fused loop: the whole run is one lax.scan over rounds -------------
 
-    def _run_fused(self, shards, theta, theta_hat, meter, *, rounds, seed,
-                   eval_every, schedule) -> Dict[str, Any]:
+    def _build_fused(self, *, rounds, n, d, n_active):
+        """Build (jitted runner, trace-time booked-bits record) for one
+        run signature.  Everything round-varying (seed key, cohort
+        schedule, eval/flush masks, model/dataset arrays) is a runner
+        *argument*; the spec, plans and shapes are baked into the trace.
+        """
         task, spec = self.task, self.spec
-        n, d = meter.n_clients, meter.d
-        n_active = schedule.shape[1]
         full = n_active == n
-        base = jax.random.PRNGKey(seed)
-
         alloc = spec.allocation
         adaptive = alloc is not None and \
             not getattr(alloc, "static_plan", False)
@@ -325,14 +455,6 @@ class FLEngine:
                                overhead_bits=overhead)]
         else:
             plans = [None]
-
-        eval_mask = np.zeros(rounds, bool)
-        eval_mask[eval_every - 1::eval_every] = True
-        if rounds:
-            eval_mask[-1] = True
-        flush_mask = np.zeros(rounds, bool)
-        if spec.sync_period:
-            flush_mask[spec.sync_period - 1::spec.sync_period] = True
 
         # Static plans: bits are data-independent, so the single trace of
         # the scan body records the per-round (and per-flush) totals as
@@ -367,83 +489,132 @@ class FLEngine:
             oh = plan.overhead_bits * n if plan is not None else 0.0
             return theta, theta_hat, up_s, dn_s, update, ul_bits, res.bits, oh
 
-        def body(carry, xs):
-            theta, theta_hat, up_s, dn_s = carry
-            kt = mrc.round_key(base, xs["t"])
-            active = xs["active"]
-            pp = xs["pin"]  # traced int32 zero: the rounding pin token
+        def run_fn(base, theta0, theta_hat0, sx, sy, xs_all):
+            self.fused_trace_count += 1  # Python side effect: trace-time only
 
-            train_keys = jax.random.split(jax.random.fold_in(kt, TAG_TRAIN), n)
-            if full:
-                priors, bx, by, keys = theta_hat, shards.x, shards.y, train_keys
-            else:
-                priors = theta_hat[active]
-                bx, by, keys = shards.x[active], shards.y[active], \
-                    train_keys[active]
-            payload = pin(pp, jax.vmap(task.local_train)(priors, bx, by, keys))
+            def body(carry, xs):
+                theta, theta_hat, up_s, dn_s = carry
+                kt = mrc.round_key(base, xs["t"])
+                active = xs["active"]
+                pp = xs["pin"]  # traced int32 zero: the rounding pin token
 
-            def make_ctx(plan):
-                return RoundContext(t=xs["t"], key=kt, n_clients=n, d=d,
-                                    active=active, plan=plan, pin_token=pp)
+                train_keys = jax.random.split(
+                    jax.random.fold_in(kt, TAG_TRAIN), n)
+                if full:
+                    priors, bx, by, keys = theta_hat, sx, sy, train_keys
+                else:
+                    priors = theta_hat[active]
+                    bx, by, keys = sx[active], sy[active], train_keys[active]
+                payload = pin(pp, jax.vmap(task.local_train)(
+                    priors, bx, by, keys))
 
-            if adaptive:
-                stats = _kl_stats(payload, priors,
-                                  needs_profile=getattr(
-                                      alloc, "needs_profile", True))
-                bidx = alloc.select_bucket(stats, d)
+                def make_ctx(plan):
+                    return RoundContext(t=xs["t"], key=kt, n_clients=n, d=d,
+                                        active=active, plan=plan,
+                                        pin_token=pp)
 
-                def make_branch(template):
-                    def branch(op):
-                        th, thh, us, ds = op
-                        plan = alloc.finalize_plan(template, stats, d)
-                        th, thh, us, ds, _, ulb, dlb, oh = round_with_plan(
-                            plan, th, thh, us, ds, payload, priors,
-                            make_ctx(plan))
-                        bits = tuple(jnp.asarray(b, jnp.float32)
-                                     for b in (ulb, dlb, oh))
-                        return th, thh, us, ds, bits
-                    return branch
+                if adaptive:
+                    stats = _kl_stats(payload, priors,
+                                      needs_profile=getattr(
+                                          alloc, "needs_profile", True))
+                    bidx = alloc.select_bucket(stats, d)
 
-                theta, theta_hat, up_s, dn_s, bits = jax.lax.switch(
-                    bidx, [make_branch(p) for p in plans],
-                    (theta, theta_hat, up_s, dn_s))
-            else:
-                theta, theta_hat, up_s, dn_s, update, ul_bits, dl_bits, oh = \
-                    round_with_plan(plans[0], theta, theta_hat, up_s, dn_s,
-                                    payload, priors, make_ctx(plans[0]))
-                booked["round"] = (ul_bits, dl_bits, oh)
-                bits = ()
+                    def make_branch(template):
+                        def branch(op):
+                            th, thh, us, ds = op
+                            plan = alloc.finalize_plan(template, stats, d)
+                            th, thh, us, ds, _, ulb, dlb, oh = \
+                                round_with_plan(plan, th, thh, us, ds,
+                                                payload, priors,
+                                                make_ctx(plan))
+                            bits = tuple(jnp.asarray(b, jnp.float32)
+                                         for b in (ulb, dlb, oh))
+                            return th, thh, us, ds, bits
+                        return branch
 
-                if spec.sync_period:
-                    def do_flush(op):
-                        th, thh, us, ds = op
-                        r_up, b_up, us = spec.uplink.flush_step(us, n, d)
-                        r_dn, b_dn, ds = spec.downlink.flush_step(ds, n, d)
-                        booked["flush"] = (b_up, b_dn)
-                        r_up, r_dn = pin(pp, (r_up, r_dn))  # residual means
-                        th = th - update.lr * (r_up + r_dn)
-                        return pin(pp, (th, jnp.tile(th[None], (n, 1)),
-                                        us, ds))
-
-                    theta, theta_hat, up_s, dn_s = jax.lax.cond(
-                        xs["flush"], do_flush, lambda op: op,
+                    theta, theta_hat, up_s, dn_s, bits = jax.lax.switch(
+                        bidx, [make_branch(p) for p in plans],
                         (theta, theta_hat, up_s, dn_s))
+                else:
+                    theta, theta_hat, up_s, dn_s, update, ul_bits, dl_bits, \
+                        oh = round_with_plan(plans[0], theta, theta_hat,
+                                             up_s, dn_s, payload, priors,
+                                             make_ctx(plans[0]))
+                    booked["round"] = (ul_bits, dl_bits, oh)
+                    bits = ()
 
-            acc = jax.lax.cond(
-                xs["eval"],
-                lambda th: jnp.asarray(task.evaluate(th), jnp.float32),
-                lambda th: jnp.full((), jnp.nan, jnp.float32), theta)
-            return (theta, theta_hat, up_s, dn_s), (acc,) + bits
+                    if spec.sync_period:
+                        def do_flush(op):
+                            th, thh, us, ds = op
+                            r_up, b_up, us = spec.uplink.flush_step(us, n, d)
+                            r_dn, b_dn, ds = spec.downlink.flush_step(
+                                ds, n, d)
+                            booked["flush"] = (b_up, b_dn)
+                            # residual means
+                            r_up, r_dn = pin(pp, (r_up, r_dn))
+                            th = th - update.lr * (r_up + r_dn)
+                            return pin(pp, (th, jnp.tile(th[None], (n, 1)),
+                                            us, ds))
 
-        carry0 = (theta, theta_hat,
-                  spec.uplink.init_up_state(n, d),
-                  spec.downlink.init_down_state(n, d))
+                        theta, theta_hat, up_s, dn_s = jax.lax.cond(
+                            xs["flush"], do_flush, lambda op: op,
+                            (theta, theta_hat, up_s, dn_s))
+
+                acc = jax.lax.cond(
+                    xs["eval"],
+                    lambda th: jnp.asarray(task.evaluate(th), jnp.float32),
+                    lambda th: jnp.full((), jnp.nan, jnp.float32), theta)
+                return (theta, theta_hat, up_s, dn_s), (acc,) + bits
+
+            carry0 = (theta0, theta_hat0,
+                      spec.uplink.init_up_state(n, d),
+                      spec.downlink.init_down_state(n, d))
+            (theta, theta_hat, _, _), outs = jax.lax.scan(
+                body, carry0, xs_all)
+            return (theta, theta_hat), outs
+
+        return jax.jit(run_fn), booked
+
+    def _run_fused(self, shards, theta, theta_hat, meter, *, rounds, seed,
+                   eval_every, schedule) -> Dict[str, Any]:
+        spec = self.spec
+        n, d = meter.n_clients, meter.d
+        n_active = schedule.shape[1]
+        alloc = spec.allocation
+        adaptive = alloc is not None and \
+            not getattr(alloc, "static_plan", False)
+
+        eval_mask = np.zeros(rounds, bool)
+        eval_mask[eval_every - 1::eval_every] = True
+        if rounds:
+            eval_mask[-1] = True
+        flush_mask = np.zeros(rounds, bool)
+        if spec.sync_period:
+            flush_mask[spec.sync_period - 1::spec.sync_period] = True
+
+        # One compiled program per run signature: the seed, cohort schedule
+        # and eval/flush masks ride in as *data*, so seed replicates and
+        # eval-cadence changes hit the cache; only a shape change (rounds,
+        # client count, model size, dataset shard dims) builds a new
+        # program.
+        sig = (rounds, n, d, n_active,
+               tuple(shards.x.shape), str(shards.x.dtype),
+               tuple(shards.y.shape), str(shards.y.dtype),
+               tuple(theta.shape), str(theta.dtype))
+        prog = self._fused_programs.get(sig)
+        if prog is None:
+            prog = self._build_fused(rounds=rounds, n=n, d=d,
+                                     n_active=n_active)
+            self._fused_programs[sig] = prog
+        fn, booked = prog
+
         xs = {"t": jnp.arange(rounds, dtype=jnp.int32),
               "active": jnp.asarray(schedule),
               "eval": jnp.asarray(eval_mask),
               "flush": jnp.asarray(flush_mask),
               "pin": jnp.zeros(rounds, jnp.int32)}
-        (theta, theta_hat, _, _), outs = jax.lax.scan(body, carry0, xs)
+        (theta, theta_hat), outs = fn(jax.random.PRNGKey(seed), theta,
+                                      theta_hat, shards.x, shards.y, xs)
 
         if adaptive:
             # Traced-bits booking: the scan's stacked per-round bit totals

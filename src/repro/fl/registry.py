@@ -201,3 +201,26 @@ def all_schemes(*, n: int, d: int, n_is: int = 16, block: int = 64,
                                               server_lr=server_lr,
                                               reset_period=reset_period)))
     return out
+
+
+def wire_scheme_ids(*, n: int = 4, d: int = 64) -> Dict[str, int]:
+    """Frame-header scheme ids for the full registry matrix.
+
+    The engine stamps ``scheme_wire_id(spec.name)`` into every message of
+    a wire-audited run; this enumerates the id of each registry scheme and
+    fails loudly if two distinct spec names ever hash to the same 16-bit
+    id (tests/test_wire.py pins the absence of collisions).
+    """
+    from repro.wire import scheme_wire_id
+    ids: Dict[str, int] = {}
+    by_id: Dict[int, str] = {}
+    for _, _, factory in all_schemes(n=n, d=d, include_adaptive=True):
+        name = factory().name
+        wid = scheme_wire_id(name)
+        if by_id.get(wid, name) != name:
+            raise ValueError(
+                f"wire scheme-id collision: {name!r} and {by_id[wid]!r} "
+                f"both hash to {wid:#06x}")
+        by_id[wid] = name
+        ids[name] = wid
+    return ids

@@ -1,0 +1,31 @@
+"""repro.wire: a real bitstream layer for every FL channel.
+
+The BitMeter books *theoretical* bits; this package makes the accounting
+falsifiable.  Channels gain ``encode_up`` / ``decode_up`` /
+``encode_down`` / ``decode_down`` hooks that serialize the exact values
+the functional core selects (``repro.fl.channels``), the engine's
+``wire="audit"`` mode routes a whole host run through encode -> decode
+each round (bit-identical trajectory, cf. tests/test_wire.py), and
+:meth:`WireSession.reconcile` fails loudly whenever booked bits diverge
+from the serialized stream beyond the documented framing overhead.
+
+Layers (lowest first): :mod:`.bitio` (MSB-first bit packing),
+:mod:`.codecs` (per-channel-family payloads), :mod:`.frame` (message
+envelope + session stream + the reconcile tolerance contract).
+"""
+from __future__ import annotations
+
+import zlib
+
+from .bitio import BitReader, BitWriter, WireFormatError  # noqa: F401
+from .codecs import WireCapacityError  # noqa: F401
+from .frame import (DIR_CTRL, DIR_DOWN, DIR_FLUSH_DOWN,  # noqa: F401
+                    DIR_FLUSH_UP, DIR_UP, DOWNLINK_DIRS,
+                    FRAME_HEADER_BITS, MAGIC, Message, RECONCILE_REL_TOL,
+                    RECONCILE_TOL_BITS, SERVER, UPLINK_DIRS, VERSION,
+                    WireSession)
+
+
+def scheme_wire_id(name: str) -> int:
+    """Stable 16-bit scheme identifier for message framing."""
+    return zlib.crc32(name.encode("utf-8")) & 0xFFFF
