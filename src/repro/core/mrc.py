@@ -26,8 +26,12 @@ Two codec paths are provided:
 
 * **segments** (`encode_segments` / `decode_segments`): variable-size blocks
   described by a segment-id vector, used by the Adaptive allocation of Isik
-  et al. (2024).  This path materialises the full candidate tensor and is
-  meant for the (small) models where adaptive allocation is evaluated.
+  et al. (2024).  The weight evaluation is pluggable via ``seg_logw_fn``:
+  the jnp default materialises the (n_is, d) candidate tensor; the Pallas
+  segment-logW kernel (``repro.kernels.ops.segment_logw_fn``) streams it
+  through VMEM instead.  ``seg_ids`` must be non-decreasing starting at 0
+  (the wire plan header is run-length coded); the codec boundary validates
+  this whenever the vector is concrete.
 """
 from __future__ import annotations
 
@@ -36,6 +40,7 @@ from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .bernoulli import clip01, log_ratio_coeffs
 
@@ -205,7 +210,69 @@ def _segment_candidates(shared_key: jax.Array, n_is: int, d: int) -> jax.Array:
     return jax.vmap(lambda r: jax.random.uniform(jax.random.fold_in(shared_key, r), (d,)))(rows)
 
 
-@functools.partial(jax.jit, static_argnames=("n_is", "n_seg"))
+SegLogWFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, int], jax.Array]
+# signature: (u: (n_is, d) uniforms, p: (d,) clipped prior, a: (d,),
+#             b: (d,), seg_ids: (d,), n_seg) -> (n_is, n_seg)
+
+
+def default_segment_logw(u: jax.Array, p: jax.Array, a: jax.Array,
+                         b: jax.Array, seg_ids: jax.Array, n_seg: int) -> jax.Array:
+    """Pure-jnp segment log-weights: vmapped segment_sum over the fused
+    compare+select ``where(u < p, a, 0)`` (materialises (n_is, d) in HBM;
+    the Pallas route in ``repro.kernels.ops.segment_logw`` does not)."""
+    xa = jnp.where(u < p[None, :], a[None, :], 0.0)             # (n_is, d)
+    seg_sum = lambda row: jax.ops.segment_sum(row, seg_ids, num_segments=n_seg)
+    return jax.vmap(seg_sum)(xa) + seg_sum(b)[None, :]          # (n_is, n_seg)
+
+
+def _validate_seg_ids(seg_ids) -> None:
+    """Host-side check of the segment-codec contract.
+
+    The wire block-plan header (``wire.codecs.put_plan_segments``) encodes a
+    segmentation as run-lengths, so a permuted ``seg_ids`` would round-trip
+    the header to a *different* segmentation and decode a wrong sample with
+    no error.  Enforce non-decreasing ids starting at 0 whenever the vector
+    is concrete; traced ``seg_ids`` (the fused engine's bucketed plans, which
+    are cumsum-built and monotone by construction) skip the check.
+    """
+    if isinstance(seg_ids, jax.core.Tracer):
+        return
+    seg = np.asarray(seg_ids)
+    if seg.ndim != 1 or seg.size == 0:
+        raise ValueError(
+            f"seg_ids must be a non-empty 1-D vector, got shape {seg.shape}")
+    if int(seg[0]) != 0 or np.any(np.diff(seg) < 0):
+        raise ValueError(
+            "seg_ids must be non-decreasing and start at 0: the wire plan "
+            "header stores segments as run-lengths, so any other ordering "
+            "round-trips to a different segmentation")
+
+
+@functools.partial(jax.jit, static_argnames=("n_is", "n_seg", "seg_logw_fn"))
+def _encode_segments(
+    shared_key: jax.Array,
+    select_key: jax.Array,
+    q: jax.Array,
+    p: jax.Array,
+    seg_ids: jax.Array,
+    *,
+    n_is: int,
+    n_seg: int,
+    seg_logw_fn: Optional[SegLogWFn] = None,
+) -> MRCResult:
+    logw_impl = seg_logw_fn if seg_logw_fn is not None else default_segment_logw
+    pc = clip01(p)
+    u = _segment_candidates(shared_key, n_is, q.shape[0])       # (n_is, d)
+    a, b = log_ratio_coeffs(q, p)                               # (d,), (d,)
+    logw = logw_impl(u, pc, a, b, seg_ids, n_seg)               # (n_is, n_seg)
+    gu = jax.random.uniform(select_key, (n_is, n_seg))
+    gumbel = -jnp.log(-jnp.log(jnp.clip(gu, 1e-12, 1.0 - 1e-12)))
+    idx = jnp.argmax(logw + gumbel, axis=0).astype(jnp.int32)   # (n_seg,)
+    u_sel = jnp.take_along_axis(u, idx[seg_ids][None, :], axis=0)[0]  # (d,)
+    chosen = (u_sel < pc).astype(jnp.float32)
+    return MRCResult(indices=idx, sample=chosen)
+
+
 def encode_segments(
     shared_key: jax.Array,
     select_key: jax.Array,
@@ -215,6 +282,7 @@ def encode_segments(
     *,
     n_is: int,
     n_seg: int,
+    seg_logw_fn: Optional[SegLogWFn] = None,
 ) -> MRCResult:
     """MRC over variable blocks given per-parameter segment ids (d,).
 
@@ -227,29 +295,35 @@ def encode_segments(
     re-thresholded from the chosen candidate *row* only, never from a
     materialised (n_is, d) sample tensor.  This is the fused adaptive
     path's per-round hot loop (every client, every sample).
+
+    ``seg_logw_fn`` makes the weight evaluation pluggable the way
+    ``logw_fn`` is for ``encode_fixed``: pass
+    ``repro.kernels.ops.segment_logw_fn()`` to route it through the Pallas
+    segment-logW kernel (streams u once, never materialises (n_is, d)).
+    It is a static jit argument hashed by identity -- hand in a cached
+    closure, not a fresh lambda per call.
     """
-    pc = clip01(p)
-    u = _segment_candidates(shared_key, n_is, d := q.shape[0])  # (n_is, d)
-    a, b = log_ratio_coeffs(q, p)                               # (d,), (d,)
-    xa = jnp.where(u < pc[None, :], a[None, :], 0.0)            # (n_is, d)
-    seg_sum = lambda row: jax.ops.segment_sum(row, seg_ids, num_segments=n_seg)
-    logw = jax.vmap(seg_sum)(xa) + seg_sum(b)[None, :]          # (n_is, n_seg)
-    gu = jax.random.uniform(select_key, (n_is, n_seg))
-    gumbel = -jnp.log(-jnp.log(jnp.clip(gu, 1e-12, 1.0 - 1e-12)))
-    idx = jnp.argmax(logw + gumbel, axis=0).astype(jnp.int32)   # (n_seg,)
-    u_sel = jnp.take_along_axis(u, idx[seg_ids][None, :], axis=0)[0]  # (d,)
-    chosen = (u_sel < pc).astype(jnp.float32)
-    return MRCResult(indices=idx, sample=chosen)
+    _validate_seg_ids(seg_ids)
+    return _encode_segments(shared_key, select_key, q, p, seg_ids,
+                            n_is=n_is, n_seg=n_seg, seg_logw_fn=seg_logw_fn)
 
 
 @functools.partial(jax.jit, static_argnames=("n_is",))
-def decode_segments(
+def _decode_segments(
     shared_key: jax.Array, indices: jax.Array, p: jax.Array, seg_ids: jax.Array, *, n_is: int
 ) -> jax.Array:
     d = p.shape[0]
     u = _segment_candidates(shared_key, n_is, d)
     u_sel = jnp.take_along_axis(u, indices[seg_ids][None, :], axis=0)[0]
     return (u_sel < clip01(p)).astype(jnp.float32)
+
+
+def decode_segments(
+    shared_key: jax.Array, indices: jax.Array, p: jax.Array, seg_ids: jax.Array, *, n_is: int
+) -> jax.Array:
+    """Reconstruct the encoder-selected sample from segment indices: (d,)."""
+    _validate_seg_ids(seg_ids)
+    return _decode_segments(shared_key, indices, p, seg_ids, n_is=n_is)
 
 
 def receive_segments(
@@ -263,12 +337,13 @@ def receive_segments(
 
 
 def transmit_segments(
-    shared_key, select_key, q, p, seg_ids, *, n_is: int, n_seg: int, n_samples: int = 1
+    shared_key, select_key, q, p, seg_ids, *, n_is: int, n_seg: int,
+    n_samples: int = 1, seg_logw_fn: Optional[SegLogWFn] = None,
 ):
     def one(ell):
         res = encode_segments(
             sample_key(shared_key, ell), sample_key(select_key, ell), q, p, seg_ids,
-            n_is=n_is, n_seg=n_seg,
+            n_is=n_is, n_seg=n_seg, seg_logw_fn=seg_logw_fn,
         )
         return res.indices, res.sample
 

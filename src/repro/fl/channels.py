@@ -404,6 +404,7 @@ class MRCAdaptiveChannel(StatelessUplink):
     n_is: int = 256
     n_samples: int = 1
     shared: bool = True
+    seg_logw_fn: Any = None
 
     def _transmit(self, ctx, payload, priors):
         plan = ctx.plan
@@ -414,7 +415,8 @@ class MRCAdaptiveChannel(StatelessUplink):
         def one(skey, sel, q_i, p_i):
             return mrc.transmit_segments(
                 skey, sel, q_i, clip01(p_i), seg, n_is=self.n_is,
-                n_seg=plan.n_blocks, n_samples=self.n_samples)
+                n_seg=plan.n_blocks, n_samples=self.n_samples,
+                seg_logw_fn=self.seg_logw_fn)
 
         q = clip01(payload)
         if self.shared:
@@ -622,6 +624,7 @@ class MRCBroadcastDownlink(StatelessDownlink):
     n_samples: int = 1           # n_DL
     chunk: int = 16
     logw_fn: Any = None
+    seg_logw_fn: Any = None
     broadcast_shareable: bool = True
 
     def _transmit(self, ctx, update, theta_hat):
@@ -633,7 +636,8 @@ class MRCBroadcastDownlink(StatelessDownlink):
         if plan.adaptive:
             idxs, est = mrc.transmit_segments(
                 skey, sel, tgt, p_common, jnp.asarray(plan.seg_ids),
-                n_is=self.n_is, n_seg=plan.n_blocks, n_samples=self.n_samples)
+                n_is=self.n_is, n_seg=plan.n_blocks, n_samples=self.n_samples,
+                seg_logw_fn=self.seg_logw_fn)
         else:
             idxs, est_b = mrc.transmit_fixed(
                 skey, sel, to_blocks(tgt, plan.size), to_blocks(p_common, plan.size),
@@ -700,6 +704,7 @@ class MRCPrivateDownlink(StatelessDownlink):
     n_samples: int = 1           # n_DL
     chunk: int = 16
     logw_fn: Any = None
+    seg_logw_fn: Any = None
     broadcast_shareable: bool = False
 
     def _transmit(self, ctx, update, theta_hat):
@@ -716,7 +721,8 @@ class MRCPrivateDownlink(StatelessDownlink):
             def one(skey, sel, p_i):
                 return mrc.transmit_segments(
                     skey, sel, tgt, p_i, seg, n_is=self.n_is,
-                    n_seg=plan.n_blocks, n_samples=self.n_samples)
+                    n_seg=plan.n_blocks, n_samples=self.n_samples,
+                    seg_logw_fn=self.seg_logw_fn)
         else:
             tb = to_blocks(tgt, plan.size)
 

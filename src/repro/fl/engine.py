@@ -56,7 +56,7 @@ import numpy as np
 from repro.core import mrc
 from repro.core.bernoulli import bern_kl, clip01
 from repro.core.bitmeter import BitMeter
-from repro.kernels.ops import bernoulli_kl_total
+from repro.kernels.ops import bernoulli_kl_profile, bernoulli_kl_total
 from .channels import (BlockPlan, RoundContext, ServerUpdate, TAG_COHORT,
                        TAG_TRAIN, pin)
 from .data import Dataset
@@ -67,20 +67,25 @@ def _kl_stats(payload, priors, *, needs_profile: bool) -> Dict[str, Any]:
 
     Mirrors the host loop's profile (per-parameter KL of the posterior
     against the client priors, averaged over the active cohort) without
-    leaving the device.  Allocations that only consume the *mean* KL
-    (``needs_profile=False``, e.g. AdaptiveAvgAllocation) take the total
-    through the Pallas ``bernoulli_kl`` streaming reduction
-    (``repro.kernels.ops.bernoulli_kl_total``) when a real accelerator
-    backend is attached; in interpret mode (CPU) the kernel emulation is
-    orders of magnitude slower than the fused XLA elementwise reduction,
-    so the jnp route is used there (the kernels' repo-wide convention:
-    interpret=True exists to *validate* on CPU, not to run hot loops).
-    Mean-over-clients of the per-client totals equals the sum of the
-    per-parameter cohort means, so both routes agree up to f32 summation
+    leaving the device.  On a real accelerator backend both allocation
+    flavours run through the Pallas ``bernoulli_kl`` streaming reduction:
+    the *mean*-only consumers (``needs_profile=False``,
+    e.g. AdaptiveAvgAllocation) take
+    ``repro.kernels.ops.bernoulli_kl_total``, and the full-profile
+    consumers (``needs_profile=True``, AdaptiveAllocation) take
+    ``repro.kernels.ops.bernoulli_kl_profile`` (parameters as kernel
+    blocks, clients streaming through the reduction).  In interpret mode
+    (CPU) the kernel emulation is orders of magnitude slower than the
+    fused XLA elementwise reduction, so the jnp route is used there (the
+    kernels' repo-wide convention: interpret=True exists to *validate* on
+    CPU, not to run hot loops).  Both routes agree up to f32 summation
     order.
     """
     p = clip01(priors)
-    if not needs_profile and jax.default_backend() != "cpu":
+    if jax.default_backend() != "cpu":
+        if needs_profile:
+            klp = bernoulli_kl_profile(payload, p, interpret=False)
+            return {"profile": klp, "total": jnp.sum(klp)}
         return {"profile": None,
                 "total": bernoulli_kl_total(payload, p, interpret=False)}
     klp = jnp.mean(jax.vmap(bern_kl)(payload, p), axis=0)
@@ -397,6 +402,23 @@ class FLEngine:
             raise ValueError(
                 f"spec {spec.name!r} cannot be wire-audited: missing "
                 f"{missing}")
+        # Fail before any round work: a non-power-of-two n_is books
+        # fractional bits per index and would only surface as a
+        # WireCapacityError from codecs.index_width mid-run.
+        from repro.wire.codecs import WireCapacityError, index_width
+        for role, chan in (("uplink", spec.uplink),
+                           ("downlink", spec.downlink)):
+            n_is = getattr(chan, "n_is", None)
+            if n_is is None:
+                continue
+            try:
+                index_width(n_is)
+            except WireCapacityError as e:
+                raise ValueError(
+                    f"spec {spec.name!r} cannot be wire-audited: {role} "
+                    f"channel {type(chan).__name__} has n_is={n_is}, "
+                    "which books fractional bits per MRC index; wire "
+                    "codecs need a power of two") from e
 
     def _encode_plan_msgs(self, plan, n):
         from repro.wire import DIR_CTRL, BitWriter, SERVER, Message

@@ -14,7 +14,7 @@ from typing import Callable, Dict
 from repro.core.blocks import (AdaptiveAllocation, AdaptiveAvgAllocation,
                                FixedAllocation)
 from repro.core.quantizers import FLOAT_BITS
-from repro.kernels.ops import mrc_logw_fn
+from repro.kernels.ops import mrc_logw_fn, segment_logw_fn
 from .channels import (DenseChannel, IndexRelayDownlink, MRCAdaptiveChannel,
                        MRCBroadcastDownlink, MRCFixedChannel,
                        MRCPrivateDownlink, QuantizedMRCUplink, SignEFChannel,
@@ -27,14 +27,18 @@ BICOMPFL_VARIANTS = ("GR", "GR-Reconst", "PR", "PR-SplitDL")
 def bicompfl_spec(variant: str, *, allocation, n_is: int = 256, n_ul: int = 1,
                   n_dl: int = 1, chunk: int = 16, logw_fn=None,
                   participation: float = 1.0,
-                  pallas_logw: bool = False) -> EngineSpec:
+                  pallas_logw: bool = False,
+                  segment_logw_pallas: bool = False) -> EngineSpec:
     """BiCompFL (probabilistic-mask) variants, paper Algorithms 1 & 2.
 
     ``n_dl`` must be resolved by the caller (the paper default is
     ``n_clients * n_ul``, which needs the cohort size).  ``pallas_logw``
     routes the fixed-block MRC importance-weight matvec through the Pallas
     ``mrc_weights`` kernel (``repro.kernels.ops.mrc_logw_fn``) on both
-    directions.
+    directions; ``segment_logw_pallas`` is the adaptive-segment analog,
+    routing the variable-block weight evaluation through the Pallas
+    segment-logW kernel (``repro.kernels.ops.segment_logw_fn``) wherever a
+    channel encodes against an adaptive plan.
     """
     if variant not in BICOMPFL_VARIANTS:
         raise ValueError(variant)
@@ -42,6 +46,7 @@ def bicompfl_spec(variant: str, *, allocation, n_is: int = 256, n_ul: int = 1,
         if logw_fn is not None:
             raise ValueError("pass either logw_fn or pallas_logw, not both")
         logw_fn = mrc_logw_fn()
+    seg_logw_fn = segment_logw_fn() if segment_logw_pallas else None
     if participation < 1.0 and variant != "PR":
         raise ValueError("partial participation requires private shared "
                          "randomness (the PR variant); GR needs all clients "
@@ -50,7 +55,8 @@ def bicompfl_spec(variant: str, *, allocation, n_is: int = 256, n_ul: int = 1,
     shared = variant.startswith("GR")
     adaptive = isinstance(allocation, AdaptiveAllocation)
     if adaptive:
-        uplink = MRCAdaptiveChannel(n_is=n_is, n_samples=n_ul, shared=shared)
+        uplink = MRCAdaptiveChannel(n_is=n_is, n_samples=n_ul, shared=shared,
+                                    seg_logw_fn=seg_logw_fn)
     else:
         uplink = MRCFixedChannel(n_is=n_is, n_samples=n_ul, shared=shared,
                                  chunk=chunk, logw_fn=logw_fn)
@@ -58,10 +64,12 @@ def bicompfl_spec(variant: str, *, allocation, n_is: int = 256, n_ul: int = 1,
         downlink = IndexRelayDownlink(n_is=n_is, n_samples=n_ul)
     elif variant == "GR-Reconst":
         downlink = MRCBroadcastDownlink(n_is=n_is, n_samples=n_dl,
-                                        chunk=chunk, logw_fn=logw_fn)
+                                        chunk=chunk, logw_fn=logw_fn,
+                                        seg_logw_fn=seg_logw_fn)
     elif variant == "PR":
         downlink = MRCPrivateDownlink(n_is=n_is, n_samples=n_dl,
-                                      chunk=chunk, logw_fn=logw_fn)
+                                      chunk=chunk, logw_fn=logw_fn,
+                                      seg_logw_fn=seg_logw_fn)
     else:  # PR-SplitDL
         if adaptive:
             raise NotImplementedError("SplitDL is defined on fixed blocks")

@@ -38,7 +38,10 @@ def _kl_kernel(q_ref, p_ref, o_ref):
 def bernoulli_kl_pallas(q: jax.Array, p: jax.Array, *, interpret: bool = True):
     """Per-block KL sums for (NB, S) with S % TILE_S == 0; returns (NB,)."""
     nb, s = q.shape
-    assert s % TILE_S == 0, s
+    if s % TILE_S != 0:
+        raise ValueError(
+            f"bernoulli_kl_pallas needs S % {TILE_S} == 0, got S={s} "
+            "(use ops.bernoulli_kl for the padded general-shape entry point)")
     grid = (nb, s // TILE_S)
     return pl.pallas_call(
         _kl_kernel,

@@ -83,7 +83,11 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """
     bh, sq, dh = q.shape
     skv_pad = k.shape[1]
-    assert sq % BQ == 0 and skv_pad % BK == 0 and dh % 128 == 0
+    if sq % BQ != 0 or skv_pad % BK != 0 or dh % 128 != 0:
+        raise ValueError(
+            f"flash_attention_pallas needs Sq % {BQ} == 0, Skv_pad % {BK} "
+            f"== 0 and Dh % 128 == 0, got Sq={sq}, Skv_pad={skv_pad}, "
+            f"Dh={dh} (use ops.flash_attention for the padded entry point)")
     nq, nk = sq // BQ, skv_pad // BK
     grid = (bh, nq, nk)
     kernel = functools.partial(_flash_kernel, causal=causal, window=window,

@@ -62,7 +62,11 @@ def mrc_logw_pallas(x: jax.Array, a: jax.Array, b: jax.Array, *, interpret: bool
     ``ops.mrc_logw`` for the padded general-shape entry point).
     """
     nb, nis, s = x.shape
-    assert nis % TILE_I == 0 and s % TILE_S == 0, (nis, s)
+    if nis % TILE_I != 0 or s % TILE_S != 0:
+        raise ValueError(
+            f"mrc_logw_pallas needs NIS % {TILE_I} == 0 and S % {TILE_S} "
+            f"== 0, got NIS={nis}, S={s} (use ops.mrc_logw for the padded "
+            "general-shape entry point)")
     grid = (nb, nis // TILE_I, s // TILE_S)
     return pl.pallas_call(
         _mrc_logw_kernel,

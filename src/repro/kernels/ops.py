@@ -52,6 +52,32 @@ def bernoulli_kl(q: jax.Array, p: jax.Array, *, interpret: bool = True):
     return bernoulli_kl_pallas(qp, pp, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("n_seg", "interpret"))
+def segment_logw(u: jax.Array, p: jax.Array, a: jax.Array, b: jax.Array,
+                 seg_ids: jax.Array, *, n_seg: int, interpret: bool = True):
+    """Segment MRC log-weights; u (NIS, D), p/a/b/seg_ids (D,) -> (NIS, n_seg).
+
+    Drop-in replacement for ``repro.core.mrc.default_segment_logw`` (as
+    ``seg_logw_fn``).  Padding contract: padded ``u`` entries carry 1.0
+    against a padded prior of 0.0 (the compare is strictly ``u < p``, so
+    they never select), padded ``a``/``b`` are 0 and padded ``seg_ids``
+    point at segment 0 -- every pad contributes exactly 0 to its segment
+    sum, and the padded candidate rows / segment columns are sliced off.
+    """
+    from .segment_logw import NSEG_LANE, TILE_D, TILE_I, segment_logw_pallas
+    nis, d = u.shape
+    up = _pad_axis(_pad_axis(u.astype(jnp.float32), 0, TILE_I, value=1.0),
+                   1, TILE_D, value=1.0)
+    pp = _pad_axis(p.astype(jnp.float32)[None], 1, TILE_D)
+    ap = _pad_axis(a.astype(jnp.float32)[None], 1, TILE_D)
+    bp = _pad_axis(b.astype(jnp.float32)[None], 1, TILE_D)
+    sp = _pad_axis(seg_ids.astype(jnp.int32)[None], 1, TILE_D)
+    nseg_pad = n_seg + (-n_seg) % NSEG_LANE
+    out = segment_logw_pallas(up, pp, ap, bp, sp, n_seg=nseg_pad,
+                              interpret=interpret)
+    return out[:nis, :n_seg]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def bernoulli_kl_total(q: jax.Array, p: jax.Array, *, interpret: bool = True):
     """Mean-over-clients total KL(q||p): q, p (n, d) -> f32 scalar (nats).
@@ -71,6 +97,24 @@ def bernoulli_kl_total(q: jax.Array, p: jax.Array, *, interpret: bool = True):
                                pp.reshape(n * nb, KL_TILE_S),
                                interpret=interpret)
     return jnp.sum(sums) / n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bernoulli_kl_profile(q: jax.Array, p: jax.Array, *, interpret: bool = True):
+    """Per-parameter cohort-mean KL(q||p): q, p (n, d) -> (d,) nats.
+
+    Transposes so each *parameter* becomes one kernel block and the client
+    axis streams through the Pallas reduction; the client axis pads with
+    q == p == 0.5 (zero KL), so the padded per-parameter sums are exact and
+    dividing by the true cohort size recovers the mean.  This is the
+    on-device profile statistic the fused engine feeds
+    ``AdaptiveAllocation`` (matching ``jnp.mean(vmap(bern_kl), axis=0)`` up
+    to f32 summation order).
+    """
+    n = q.shape[0]
+    qp = _pad_axis(q.astype(jnp.float32).T, 1, KL_TILE_S, value=0.5)
+    pp = _pad_axis(p.astype(jnp.float32).T, 1, KL_TILE_S, value=0.5)
+    return bernoulli_kl_pallas(qp, pp, interpret=interpret) / n
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -134,4 +178,18 @@ def mrc_logw_fn(interpret: bool = True):
     """
     def fn(x, a, b):
         return mrc_logw(x, a, b, interpret=interpret)
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def segment_logw_fn(interpret: bool = True):
+    """Return a ``seg_logw_fn`` closure for ``repro.core.mrc.encode_segments``.
+
+    Cached per ``interpret`` value for the same reason as ``mrc_logw_fn``:
+    the encoder treats the hook as a static jit argument hashed by
+    identity, so a fresh closure per call would retrace.
+    """
+    def fn(u, p, a, b, seg_ids, n_seg):
+        return segment_logw(u, p, a, b, seg_ids, n_seg=n_seg,
+                            interpret=interpret)
     return fn

@@ -80,7 +80,10 @@ def rwkv_chunk_pallas(r: jax.Array, k: jax.Array, v: jax.Array,
     ``ops.rwkv_time_mix`` for the general-shape entry point.
     """
     bh, s, dh = r.shape
-    assert s % CHUNK == 0, s
+    if s % CHUNK != 0:
+        raise ValueError(
+            f"rwkv_chunk_pallas needs S % {CHUNK} == 0, got S={s} "
+            "(use ops.rwkv_time_mix for the padded general-shape entry point)")
     n_chunks = s // CHUNK
     grid = (bh, n_chunks)
     kernel = functools.partial(_rwkv_chunk_kernel, n_chunks=n_chunks)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: segment MRC importance log-weights.
+
+The adaptive (variable-block) codec evaluates
+
+    logW[i, s] = sum_{e in seg s} x_{ie} * a_e  +  sum_{e in seg s} b_e
+
+for every candidate row i and segment s.  The jnp route
+(``core.mrc.default_segment_logw``) materialises the full (n_is, d)
+``xa = where(u < p, a, 0)`` tensor in HBM and runs a vmapped
+``segment_sum``.  Here the candidate uniforms stream through VMEM once:
+each (TILE_I, TILE_D) tile of ``u`` is compared against the prior row and
+selected against ``a`` in registers, then reduced per segment on the MXU
+via a one-hot segment matrix
+
+    M[e, s] = (seg_ids[e] == s)          (TILE_D, NSEG)
+
+so the per-tile partial is the matmul ``xa_tile @ M`` (exact: M is 0/1 and
+xa is finite, so the dot is a masked sum, not an approximation).  The
+candidate-independent prior term folds in as ``b_tile @ M`` on the same
+one-hot.  Partials accumulate in a VMEM scratch block across the
+sequential d-grid dimension and the (TILE_I, NSEG) result is written out
+once on the last d-tile -- the (n_is, d) ``xa`` tensor never exists in HBM.
+
+Grid: (NIS/TILE_I, D/TILE_D); the d axis is innermost, so each i-tile sees
+its d-tiles back to back and the scratch accumulator carries cleanly.
+VMEM working set per step: 128*128*4 (u) + 4*128*4 (p, a, b, seg) +
+2*128*NSEG*4 (one-hot + scratch) -- ~1.2 MiB at NSEG=512, well under the
+16 MiB VMEM budget for the model sizes adaptive allocation targets.
+Shapes must be pre-padded (``ops.segment_logw`` is the general-shape entry
+point and documents the padding contract).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_I = 128   # candidate-row tile (MXU sublane dim)
+TILE_D = 128   # parameter tile (MXU lane dim)
+NSEG_LANE = 128  # segment axis must pad to the lane width
+
+
+def _segment_logw_kernel(u_ref, p_ref, a_ref, b_ref, seg_ref, o_ref, acc_ref):
+    """One (i_tile, d_tile) grid step."""
+    k = pl.program_id(1)
+    n_k = pl.num_programs(1)
+    nseg = o_ref.shape[1]
+
+    seg = seg_ref[0]                                   # (TILE_D,) int32
+    onehot = (seg[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (seg.shape[0], nseg), 1)).astype(jnp.float32)
+    # Fused compare + select: x is {0,1}, so x*a == where(u < p, a, 0).
+    xa = jnp.where(u_ref[...] < p_ref[0][None, :], a_ref[0][None, :], 0.0)
+    part = jnp.dot(xa, onehot, preferred_element_type=jnp.float32)
+    part = part + jnp.dot(b_ref[...], onehot,
+                          preferred_element_type=jnp.float32)  # (1, nseg) bcast
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = part
+
+    @pl.when(k != 0)
+    def _acc():
+        acc_ref[...] = acc_ref[...] + part
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_seg", "interpret"))
+def segment_logw_pallas(u: jax.Array, p: jax.Array, a: jax.Array,
+                        b: jax.Array, seg_ids: jax.Array, *, n_seg: int,
+                        interpret: bool = True) -> jax.Array:
+    """Per-segment importance log-weights for tile-aligned shapes.
+
+    u: (NIS, D) uniforms; p, a, b: (1, D) f32; seg_ids: (1, D) int32 with
+    values in [0, n_seg).  Returns (NIS, n_seg) f32.  Requires
+    NIS % TILE_I == 0, D % TILE_D == 0 and n_seg % NSEG_LANE == 0 (use
+    ``ops.segment_logw`` for the padded general-shape entry point).
+    """
+    nis, d = u.shape
+    if nis % TILE_I != 0 or d % TILE_D != 0 or n_seg % NSEG_LANE != 0:
+        raise ValueError(
+            f"segment_logw_pallas needs NIS % {TILE_I} == 0, D % {TILE_D} "
+            f"== 0 and n_seg % {NSEG_LANE} == 0; got NIS={nis}, D={d}, "
+            f"n_seg={n_seg} (use ops.segment_logw for general shapes)")
+    grid = (nis // TILE_I, d // TILE_D)
+    return pl.pallas_call(
+        _segment_logw_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_I, TILE_D), lambda i, k: (i, k)),
+            pl.BlockSpec((1, TILE_D), lambda i, k: (0, k)),
+            pl.BlockSpec((1, TILE_D), lambda i, k: (0, k)),
+            pl.BlockSpec((1, TILE_D), lambda i, k: (0, k)),
+            pl.BlockSpec((1, TILE_D), lambda i, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((TILE_I, n_seg), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nis, n_seg), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((TILE_I, n_seg), jnp.float32)],
+        interpret=interpret,
+    )(u, p, a, b, seg_ids)

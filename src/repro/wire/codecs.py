@@ -95,6 +95,11 @@ def put_plan_segments(w: BitWriter, seg_ids, max_block: int) -> None:
     bits iff the segment is no longer than ``max_block``.
     """
     seg = np.asarray(seg_ids, dtype=np.int64)
+    if seg.size and (seg[0] != 0 or np.any(np.diff(seg) < 0)):
+        raise WireFormatError(
+            "plan seg_ids must be non-decreasing starting at 0: the header "
+            "stores run-lengths, so any other ordering would round-trip to "
+            "a different segmentation")
     lengths = np.bincount(seg, minlength=int(seg.max()) + 1)
     width = _plan_field_width(max_block)
     if np.any(lengths < 1):

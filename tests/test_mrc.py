@@ -90,6 +90,25 @@ class TestSegmentCodec:
         dec = mrc.decode_segments(KEY, res.indices, p, seg, n_is=16)
         np.testing.assert_array_equal(np.asarray(res.sample), np.asarray(dec))
 
+    def test_rejects_permuted_seg_ids(self):
+        """The wire plan header is run-length coded, so a permuted seg_ids
+        would silently round-trip to a different segmentation: the codec
+        boundary must refuse it."""
+        d, n_seg = 16, 4
+        q = jax.random.uniform(KEY, (d,), minval=0.2, maxval=0.8)
+        p = jnp.clip(q + 0.05, 0.05, 0.95)
+        good = jnp.repeat(jnp.arange(n_seg), d // n_seg)
+        permuted = good[::-1]
+        with pytest.raises(ValueError, match="non-decreasing"):
+            mrc.encode_segments(KEY, jax.random.fold_in(KEY, 3), q, p,
+                                permuted, n_is=8, n_seg=n_seg)
+        with pytest.raises(ValueError, match="non-decreasing"):
+            mrc.decode_segments(KEY, jnp.zeros((n_seg,), jnp.int32), p,
+                                permuted, n_is=8)
+        with pytest.raises(ValueError, match="non-decreasing"):
+            mrc.encode_segments(KEY, jax.random.fold_in(KEY, 3), q, p,
+                                good + 1, n_is=8, n_seg=n_seg + 1)
+
     def test_matches_fixed_when_blocks_equal(self):
         """Uniform segments == fixed blocks of the same size (same estimate
         family; indices differ by key layout, so compare statistically)."""

@@ -215,6 +215,15 @@ class TestCodecs:
         with pytest.raises(WireFormatError):
             codecs.get_plan_segments(BitReader(w.getvalue(), 6), 5, 64)
 
+    def test_plan_segments_rejects_non_monotone(self):
+        # the header is run-length coded: a permuted seg_ids has the same
+        # bincount and would round-trip to a *different* segmentation
+        good = np.repeat(np.arange(3), [2, 5, 1])
+        with pytest.raises(WireFormatError, match="non-decreasing"):
+            codecs.put_plan_segments(BitWriter(), good[::-1], 8)
+        with pytest.raises(WireFormatError, match="non-decreasing"):
+            codecs.put_plan_segments(BitWriter(), good + 1, 8)
+
     def test_sign_pass_roundtrip_at_booked_rate(self):
         rng = np.random.default_rng(4)
         d = 45  # not a byte multiple: bitmap padding is in the frame, not here
@@ -569,6 +578,33 @@ def test_wire_audit_rejects_unwireable_spec(wire_setup):
     with pytest.raises(ValueError, match="cannot be wire-audited"):
         FLEngine(mask_task, spec).run(shards, rounds=1, mode="host",
                                       wire="audit")
+
+
+def test_wire_audit_rejects_non_pow2_n_is_upfront(wire_setup):
+    """A fractional-bit n_is must fail before any round work, naming the
+    offending channel -- not as a WireCapacityError mid-run."""
+    from repro.core.blocks import FixedAllocation
+    mask_task, _, _, shards = wire_setup
+    spec = registry.bicompfl_spec("GR", allocation=FixedAllocation(32),
+                                  n_is=6, n_dl=N)
+    eng = FLEngine(mask_task, spec)
+    with pytest.raises(ValueError,
+                       match=r"MRCFixedChannel has n_is=6"):
+        eng.run(shards, rounds=3, seed=1, mode="host", wire="audit")
+    # off the wire, a non-pow2 n_is is perfectly legal (bits are booked
+    # at the information-theoretic log2 rate)
+    out = FLEngine(mask_task, spec).run(shards, rounds=1, seed=1, mode="host")
+    assert len(out["history"]) == 1
+
+
+def test_registry_schemes_have_wireable_n_is():
+    """Every registry scheme's channels book integer bits per MRC index."""
+    for name, _, factory in SCHEMES:
+        spec = factory()
+        for chan in (spec.uplink, spec.downlink):
+            n_is = getattr(chan, "n_is", None)
+            if n_is is not None:
+                codecs.index_width(n_is)  # raises WireCapacityError if not
 
 
 def test_scheme_wire_ids_fit_header_without_collision():
