@@ -19,7 +19,12 @@ Per scheme we record:
   ``wire="audit"`` host run (every payload serialized through
   ``repro.wire`` and reconciled against the BitMeter; the reconcile
   failing aborts the benchmark): total stream bytes, bytes/round,
-  payload vs framing split, and message count.
+  payload vs framing split, and message count;
+* ``fault_drop``                -- accuracy / total bits / dropout count
+  of a short fused run under injected client dropouts at rates
+  {0, 0.1, 0.3} (DESIGN.md §8); the rate-0 row must be bit-identical to
+  the clean run, so the fault machinery's zero-cost property is a
+  benchmarked tripwire, not just a unit test.
 
 The matrix includes an *adaptive* BiCompFL scheme (KL-driven block
 allocation): the fused path runs it through bucketed plans selected on
@@ -53,6 +58,7 @@ from repro.core.blocks import (AdaptiveAllocation, AdaptiveAvgAllocation,
 from repro.fl import registry
 from repro.fl.data import make_synthetic, partition_iid
 from repro.fl.engine import FLEngine
+from repro.fl.faults import FaultPlan
 from repro.fl.nets import make_mlp
 from repro.fl.tasks import make_cfl_task, make_mask_task
 
@@ -138,12 +144,40 @@ def bench_scheme(name, task, spec_factory, shards, theta0, *, rounds,
         wire_framing_bits=int(ws["framing_bits"]),
         wire_messages=int(ws["messages"]))
 
+    # degraded-run columns: the same scheme under injected client dropouts
+    # (DESIGN.md §8).  drop_rate=0 doubles as a tripwire: a trivial
+    # FaultPlan must leave the run bit-identical to faults=None.
+    fault_rounds = min(rounds, 10)
+    fault_cols = {}
+    clean = FLEngine(task, spec_factory()).run(
+        shards, theta0, rounds=fault_rounds, seed=0,
+        eval_every=fault_rounds, mode="fused")
+    for rate in (0.0, 0.1, 0.3):
+        out = FLEngine(task, spec_factory()).run(
+            shards, theta0, rounds=fault_rounds, seed=0,
+            eval_every=fault_rounds, mode="fused",
+            faults=FaultPlan(drop_rate=rate, seed=0))
+        if rate == 0.0:
+            assert out["final_acc"] == clean["final_acc"], name
+            assert out["meter"] == clean["meter"], name
+        key = f"{rate:g}"
+        fault_cols[key] = {
+            "acc": out["final_acc"],
+            "total_bits": out["meter"]["total_bits"],
+            "dropped": out["faults"]["summary"]["dropped_total"],
+        }
+    res["fault_rounds"] = fault_rounds
+    res["fault_drop"] = fault_cols
+
     print(f"{name:18s} host={host_s:7.2f}s ({res['host_rps']:7.1f} r/s)  "
           f"fused={fused_s:7.2f}s ({res['fused_rps']:7.1f} r/s)  "
           f"cold={cold_s:7.2f}s  speedup={res['speedup']:5.2f}x "
           f"(cold {res['speedup_cold']:4.2f}x)  "
           f"wire={res['wire_bytes_per_round']:,.0f}B/round "
-          f"({ws['messages']} msgs/{audit_rounds}r)", flush=True)
+          f"({ws['messages']} msgs/{audit_rounds}r)  "
+          + " ".join(f"drop{k}={v['acc']:.3f}/"
+                     f"{v['total_bits'] / 8e3:,.0f}kB"
+                     for k, v in fault_cols.items()), flush=True)
     return res
 
 

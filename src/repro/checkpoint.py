@@ -2,67 +2,188 @@
 
 Self-contained binary format (no external deps): a JSON header describing
 the tree structure + dtype/shape per leaf, followed by raw little-endian
-leaf buffers.  Restore rebuilds the exact pytree (dict / list / tuple /
-NamedTuple nesting) and can re-shard onto a mesh via device_put.
+leaf buffers.  Restore rebuilds the exact pytree (dict / list / tuple
+nesting) and can re-shard onto a mesh via device_put.
+
+Crash safety: ``save`` writes to a unique temp file, fsyncs it, and
+atomically renames it over the target (a crash mid-save can never shadow
+a good checkpoint with a torn one), and ``latest_step`` / ``latest``
+*validate* candidates -- magic, parseable header, complete payload --
+warning on and skipping corrupt or partially-written files instead of
+choosing them.
+
+Two addressing modes:
+
+* single file -- ``save(path, tree, step=)`` / ``restore(path, like)`` /
+  ``load(path)``: one checkpoint, overwritten in place (atomically);
+* step directory -- ``save_step(dir, tree, step)`` / ``latest(dir)``:
+  one ``ckpt_<step>.repro`` file per step, so an interrupted run resumes
+  from the newest *valid* step (the FL engine's ``resume_from=``).
+
+``load`` needs no reference tree: v2 headers carry a JSON ``structure``
+descriptor (nested dicts/lists/tuples with leaf indices) alongside the
+legacy ``treedef`` string, so a resuming process can rebuild the saved
+state without reconstructing its shape first.  Scalars saved from Python
+floats/ints come back as 0-d numpy arrays (bit-exact round-trip).
 """
 from __future__ import annotations
 
 import json
 import os
 import struct
-from typing import Any, Optional
+import warnings
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
 
 MAGIC = b"REPROCKPT1"
+_STEP_FMT = "ckpt_{step:08d}.repro"
 
 
-def _encode_tree(tree) -> Any:
-    """Structure descriptor with leaves replaced by indices."""
-    leaves, treedef = jax.tree.flatten(tree)
-    return leaves, str(treedef)
+class CheckpointError(AssertionError):
+    """A checkpoint file is torn or structurally invalid (loud by design,
+    like :class:`repro.core.bitmeter.ReconcileError`)."""
+
+
+# ---------------------------------------------------------------------------
+# Structure descriptor: JSON-serializable nesting with leaves as indices.
+# ---------------------------------------------------------------------------
+
+
+def _describe(tree, counter) -> Any:
+    if isinstance(tree, dict):
+        # jax.tree.leaves flattens dicts in sorted-key order; the
+        # descriptor must hand out leaf indices in the same order or a
+        # dict with non-alphabetical insertion order rebuilds scrambled.
+        return {"kind": "dict",
+                "items": [[k, _describe(v, counter)]
+                          for k, v in sorted(tree.items())]}
+    if isinstance(tree, (list, tuple)):
+        kind = "list" if isinstance(tree, list) else "tuple"
+        return {"kind": kind,
+                "items": [_describe(v, counter) for v in tree]}
+    if tree is None:
+        return {"kind": "none"}
+    idx = counter[0]
+    counter[0] += 1
+    return {"kind": "leaf", "index": idx}
+
+
+def _rebuild(desc, leaves) -> Any:
+    kind = desc["kind"]
+    if kind == "dict":
+        return {k: _rebuild(v, leaves) for k, v in desc["items"]}
+    if kind == "list":
+        return [_rebuild(v, leaves) for v in desc["items"]]
+    if kind == "tuple":
+        return tuple(_rebuild(v, leaves) for v in desc["items"])
+    if kind == "none":
+        return None
+    return leaves[desc["index"]]
+
+
+# ---------------------------------------------------------------------------
+# Save / restore.
+# ---------------------------------------------------------------------------
 
 
 def save(path: str, tree, *, step: Optional[int] = None) -> None:
     leaves = jax.tree.leaves(tree)
     leaves = [np.asarray(l) for l in leaves]
     treedef = jax.tree.structure(tree)
+    counter = [0]
+    structure = _describe(tree, counter)
     header = {
         "treedef": str(treedef),
+        "structure": structure if counter[0] == len(leaves) else None,
         "step": step,
-        "leaves": [{"dtype": str(l.dtype), "shape": list(l.shape)} for l in leaves],
+        "leaves": [{"dtype": str(l.dtype), "shape": list(l.shape)}
+                   for l in leaves],
     }
     hdr = json.dumps(header).encode()
-    tmp = path + ".tmp"
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # Unique temp name (pid) so two writers cannot tear each other's temp;
+    # fsync file + directory so the rename is durable before it is visible.
+    tmp = f"{path}.tmp.{os.getpid()}"
+    dirname = os.path.dirname(os.path.abspath(path))
+    os.makedirs(dirname, exist_ok=True)
     with open(tmp, "wb") as f:
         f.write(MAGIC)
         f.write(struct.pack("<Q", len(hdr)))
         f.write(hdr)
         for l in leaves:
             f.write(np.ascontiguousarray(l).tobytes())
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
+    try:
+        dfd = os.open(dirname, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:  # directory fsync is best-effort (not all FSes allow it)
+        pass
+
+
+def _read_header(f) -> dict:
+    magic = f.read(len(MAGIC))
+    if magic != MAGIC:
+        raise CheckpointError("not a repro checkpoint (bad magic)")
+    raw = f.read(8)
+    if len(raw) != 8:
+        raise CheckpointError("truncated header length")
+    (hlen,) = struct.unpack("<Q", raw)
+    hdr = f.read(hlen)
+    if len(hdr) != hlen:
+        raise CheckpointError("truncated header")
+    try:
+        header = json.loads(hdr)
+    except ValueError as e:
+        raise CheckpointError(f"unparseable header: {e}") from e
+    if not isinstance(header, dict) or "leaves" not in header:
+        raise CheckpointError("header missing leaf table")
+    return header
+
+
+def _payload_bytes(header) -> int:
+    total = 0
+    for meta in header["leaves"]:
+        dt = np.dtype(meta["dtype"])
+        n = int(np.prod(meta["shape"])) if meta["shape"] else 1
+        total += n * dt.itemsize
+    return total
+
+
+def _read_leaves(f, header):
+    out = []
+    for meta in header["leaves"]:
+        dt = np.dtype(meta["dtype"])
+        n = int(np.prod(meta["shape"])) if meta["shape"] else 1
+        buf = f.read(n * dt.itemsize)
+        if len(buf) != n * dt.itemsize:
+            raise CheckpointError("truncated leaf payload")
+        out.append(np.frombuffer(buf, dt).reshape(meta["shape"]))
+    return out
 
 
 def restore(path: str, like, *, mesh=None, specs=None):
     """Restore into the structure of ``like`` (a pytree of arrays/SDS)."""
     with open(path, "rb") as f:
-        assert f.read(len(MAGIC)) == MAGIC, "not a repro checkpoint"
-        (hlen,) = struct.unpack("<Q", f.read(8))
-        header = json.loads(f.read(hlen))
-        out_leaves = []
-        for meta in header["leaves"]:
-            dt = np.dtype(meta["dtype"])
-            n = int(np.prod(meta["shape"])) if meta["shape"] else 1
-            buf = f.read(n * dt.itemsize)
-            out_leaves.append(np.frombuffer(buf, dt).reshape(meta["shape"]))
+        header = _read_header(f)
+        out_leaves = _read_leaves(f, header)
     treedef = jax.tree.structure(like)
     ref_leaves = jax.tree.leaves(like)
-    assert len(ref_leaves) == len(out_leaves), "checkpoint/tree leaf mismatch"
+    if len(ref_leaves) != len(out_leaves):
+        raise CheckpointError(
+            f"checkpoint has {len(out_leaves)} leaves, reference tree "
+            f"{len(ref_leaves)}")
     arrs = []
     for ref, val in zip(ref_leaves, out_leaves):
-        assert tuple(ref.shape) == tuple(val.shape), (ref.shape, val.shape)
+        if tuple(ref.shape) != tuple(val.shape):
+            raise CheckpointError(
+                f"leaf shape mismatch: checkpoint {tuple(val.shape)} vs "
+                f"reference {tuple(ref.shape)}")
         arrs.append(val)
     tree = jax.tree.unflatten(treedef, arrs)
     if mesh is not None and specs is not None:
@@ -76,10 +197,97 @@ def restore(path: str, like, *, mesh=None, specs=None):
     return tree
 
 
+def load(path: str) -> Tuple[Any, Optional[int]]:
+    """Load ``(tree, step)`` with no reference tree (self-describing v2).
+
+    Leaves come back as numpy arrays (0-d for saved Python scalars);
+    callers convert to device arrays where needed.  Raises
+    :class:`CheckpointError` on files saved without a structure
+    descriptor (pre-v2) or on any corruption.
+    """
+    with open(path, "rb") as f:
+        header = _read_header(f)
+        if header.get("structure") is None:
+            raise CheckpointError(
+                f"{path} has no structure descriptor; use restore(path, "
+                "like) with a reference tree")
+        leaves = _read_leaves(f, header)
+    return _rebuild(header["structure"], leaves), header.get("step")
+
+
+# ---------------------------------------------------------------------------
+# Validation + latest-step discovery (skip torn files, loudly).
+# ---------------------------------------------------------------------------
+
+
+def validate(path: str) -> Tuple[bool, Optional[int], str]:
+    """Cheap structural check: ``(ok, step, reason)``.
+
+    Verifies magic, header parse, and that the file carries the complete
+    leaf payload the header promises -- the failure modes of a crash
+    mid-write (should never happen with the atomic ``save``, but a prior
+    non-atomic writer or a copied partial file still must not be chosen).
+    """
+    try:
+        size = os.path.getsize(path)
+        with open(path, "rb") as f:
+            header = _read_header(f)
+            body_start = f.tell()
+        expected = body_start + _payload_bytes(header)
+        if size < expected:
+            return False, header.get("step"), (
+                f"truncated payload ({size} bytes, header promises "
+                f"{expected})")
+        return True, header.get("step"), ""
+    except (OSError, CheckpointError, ValueError) as e:
+        return False, None, str(e)
+
+
 def latest_step(path: str) -> Optional[int]:
+    """Step recorded in ``path``, or None if absent or corrupt (warns)."""
     if not os.path.exists(path):
         return None
-    with open(path, "rb") as f:
-        assert f.read(len(MAGIC)) == MAGIC
-        (hlen,) = struct.unpack("<Q", f.read(8))
-        return json.loads(f.read(hlen)).get("step")
+    ok, step, reason = validate(path)
+    if not ok:
+        warnings.warn(f"skipping corrupt checkpoint {path}: {reason}",
+                      RuntimeWarning, stacklevel=2)
+        return None
+    return step
+
+
+def step_path(directory: str, step: int) -> str:
+    return os.path.join(directory, _STEP_FMT.format(step=int(step)))
+
+
+def save_step(directory: str, tree, step: int) -> str:
+    """Save one per-step checkpoint file under ``directory``."""
+    path = step_path(directory, step)
+    save(path, tree, step=int(step))
+    return path
+
+
+def latest(directory: str) -> Tuple[Optional[str], Optional[int]]:
+    """Newest *valid* per-step checkpoint in ``directory``.
+
+    Scans ``ckpt_*.repro`` files newest-first, warns on and skips any
+    corrupt/partial candidate, and returns ``(path, step)`` of the first
+    valid one -- ``(None, None)`` when the directory holds none.
+    """
+    if not os.path.isdir(directory):
+        return None, None
+    names = sorted((n for n in os.listdir(directory)
+                    if n.startswith("ckpt_") and n.endswith(".repro")),
+                   reverse=True)
+    for name in names:
+        path = os.path.join(directory, name)
+        ok, step, reason = validate(path)
+        if not ok:
+            warnings.warn(f"skipping corrupt checkpoint {path}: {reason}",
+                          RuntimeWarning, stacklevel=2)
+            continue
+        if step is None:  # step files always record their step
+            warnings.warn(f"skipping step-less checkpoint {path}",
+                          RuntimeWarning, stacklevel=2)
+            continue
+        return path, int(step)
+    return None, None

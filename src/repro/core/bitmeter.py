@@ -27,24 +27,38 @@ class BitMeter:
     broadcast_downlink_shareable: bool = True  # False for PR-style downlinks
     uplink_bits: float = 0.0    # summed over clients and rounds
     downlink_bits: float = 0.0  # summed over clients and rounds
+    retransmit_bits: float = 0.0  # corrupted-in-flight copies (both links)
     rounds: int = 0
     history: List[Dict[str, float]] = field(default_factory=list)
 
     def add_round(self, uplink_bits_total: float, downlink_bits_total: float,
-                  overhead_bits: float = 0.0) -> None:
-        """Book one global round. Totals are summed across clients."""
+                  overhead_bits: float = 0.0,
+                  retransmit_bits: float = 0.0) -> None:
+        """Book one global round. Totals are summed across clients.
+
+        ``retransmit_bits`` are payload bits of frame copies that were
+        corrupted in flight and had to be resent (or were lost after the
+        retry budget): they count toward ``total_bits`` -- the real price
+        of an unreliable link -- but never toward the per-direction
+        *useful* payload totals the wire stream reconciles.
+        """
         self.uplink_bits += uplink_bits_total + overhead_bits
         self.downlink_bits += downlink_bits_total
+        self.retransmit_bits += retransmit_bits
         self.rounds += 1
-        self.history.append({
+        entry = {
             "round": self.rounds,
             "uplink_bits": uplink_bits_total + overhead_bits,
             "downlink_bits": downlink_bits_total,
-            "cum_bits": self.uplink_bits + self.downlink_bits,
-        })
+            "cum_bits": self.uplink_bits + self.downlink_bits
+            + self.retransmit_bits,
+        }
+        if retransmit_bits:
+            entry["retransmit_bits"] = retransmit_bits
+        self.history.append(entry)
 
     def book_run(self, uplink_bits, downlink_bits, overhead_bits=0.0,
-                 snapshot_mask=None):
+                 retransmit_bits=0.0, snapshot_mask=None):
         """Book a whole run's rounds in one call (per-round total sequences).
 
         Used after a fused (device-resident) execution.  With a static
@@ -60,10 +74,13 @@ class BitMeter:
         at evaluation rounds.
         """
         per_round_overhead = hasattr(overhead_bits, "__len__")
+        per_round_retrans = hasattr(retransmit_bits, "__len__")
         snaps = []
         for t, (u, dl) in enumerate(zip(uplink_bits, downlink_bits)):
             oh = overhead_bits[t] if per_round_overhead else overhead_bits
-            self.add_round(float(u), float(dl), overhead_bits=float(oh))
+            rt = retransmit_bits[t] if per_round_retrans else retransmit_bits
+            self.add_round(float(u), float(dl), overhead_bits=float(oh),
+                           retransmit_bits=float(rt))
             if snapshot_mask is None or snapshot_mask[t]:
                 snaps.append((self.total_bits, self.total_bpp))
         return snaps
@@ -83,8 +100,12 @@ class BitMeter:
         return self._per(self.downlink_bits)
 
     @property
+    def retransmit_bpp(self) -> float:
+        return self._per(self.retransmit_bits)
+
+    @property
     def total_bpp(self) -> float:
-        return self.uplink_bpp + self.downlink_bpp
+        return self.uplink_bpp + self.downlink_bpp + self.retransmit_bpp
 
     @property
     def total_bpp_bc(self) -> float:
@@ -92,15 +113,17 @@ class BitMeter:
         dl = self.downlink_bpp
         if self.broadcast_downlink_shareable:
             dl = dl / self.n_clients
-        return self.uplink_bpp + dl
+        return self.uplink_bpp + dl + self.retransmit_bpp
 
     @property
     def total_bits(self) -> float:
-        return self.uplink_bits + self.downlink_bits
+        return self.uplink_bits + self.downlink_bits + self.retransmit_bits
 
     def reconcile(self, uplink_stream_bits: float,
-                  downlink_stream_bits: float, *, framing_bits: float = 0.0,
-                  n_messages: int = 0, frame_header_bits: int = 0,
+                  downlink_stream_bits: float, *,
+                  retransmit_stream_bits: float = 0.0,
+                  framing_bits: float = 0.0,
+                  n_messages: int = 0, frame_overhead_bits: int = 0,
                   tol_bits: float = 0.0,
                   rel_tol: float = 1e-9) -> Dict[str, float]:
         """Audit booked bits against serialized stream lengths.
@@ -110,12 +133,14 @@ class BitMeter:
         they must match the booked per-direction totals within ``tol_bits``
         plus a ``rel_tol`` relative slack for float64 bookkeeping round-off
         (the codecs themselves are exact -- see repro.wire.frame for the
-        tolerance contract).  When framing figures are supplied, the
-        framing overhead must lie within the per-message envelope
-        ``[n_messages * frame_header_bits,
-        n_messages * (frame_header_bits + 7)]`` (header + <8 pad bits).
-        Raises :class:`ReconcileError` on any divergence; returns the
-        audit report otherwise.
+        tolerance contract).  ``retransmit_stream_bits`` are the summed
+        payload bits of corrupted-in-flight frame copies and must match
+        the booked ``retransmit_bits`` the same way.  When framing figures
+        are supplied, the framing overhead must lie within the per-message
+        envelope ``[n_messages * frame_overhead_bits,
+        n_messages * (frame_overhead_bits + 7)]`` (header + CRC trailer +
+        <8 pad bits).  Raises :class:`ReconcileError` on any divergence;
+        returns the audit report otherwise.
         """
         def check(link: str, booked: float, stream: float) -> float:
             err = abs(booked - stream)
@@ -129,14 +154,16 @@ class BitMeter:
 
         up_err = check("uplink", self.uplink_bits, uplink_stream_bits)
         dn_err = check("downlink", self.downlink_bits, downlink_stream_bits)
+        rt_err = check("retransmit", self.retransmit_bits,
+                       retransmit_stream_bits)
         if n_messages:
-            lo = n_messages * frame_header_bits
-            hi = n_messages * (frame_header_bits + 7)
+            lo = n_messages * frame_overhead_bits
+            hi = n_messages * (frame_overhead_bits + 7)
             if not lo <= framing_bits <= hi:
                 raise ReconcileError(
                     f"framing overhead {framing_bits} bits outside "
                     f"[{lo}, {hi}] for {n_messages} messages of "
-                    f"{frame_header_bits}-bit headers")
+                    f"{frame_overhead_bits}-bit frame overhead")
         return {
             "uplink_booked_bits": self.uplink_bits,
             "uplink_stream_bits": uplink_stream_bits,
@@ -144,6 +171,9 @@ class BitMeter:
             "downlink_booked_bits": self.downlink_bits,
             "downlink_stream_bits": downlink_stream_bits,
             "downlink_err_bits": dn_err,
+            "retransmit_booked_bits": self.retransmit_bits,
+            "retransmit_stream_bits": retransmit_stream_bits,
+            "retransmit_err_bits": rt_err,
             "framing_bits": framing_bits,
             "n_messages": n_messages,
         }
@@ -154,6 +184,8 @@ class BitMeter:
             "bpp_bc": self.total_bpp_bc,
             "uplink_bpp": self.uplink_bpp,
             "downlink_bpp": self.downlink_bpp,
+            "retransmit_bpp": self.retransmit_bpp,
             "total_bits": self.total_bits,
+            "retransmit_bits": self.retransmit_bits,
             "rounds": self.rounds,
         }

@@ -176,6 +176,11 @@ class RoundContext:
     active: Any           # sorted global ids of the participating cohort
     plan: Optional[BlockPlan] = None
     pin_token: Any = None  # traced int32 zero in the fused path (cf. pin)
+    # Aggregation weights over cohort positions under injected faults
+    # (repro.fl.faults): 0.0 for dropped / straggling / lost-uplink
+    # clients, 1.0 for contributors.  None on fault-free rounds, keeping
+    # every aggregator expression bit-identical to the no-faults engine.
+    up_weight: Any = None
 
     @property
     def n_active(self) -> int:
@@ -273,6 +278,13 @@ class StatelessUplink:
     def init_up_state(self, n: int, d: int):
         return EMPTY_STATE
 
+    def export_state(self):
+        """Shell-state snapshot (fault-injection carry; trivial here)."""
+        return EMPTY_STATE
+
+    def import_state(self, state) -> None:
+        pass
+
     def transmit(self, ctx, payload, priors):
         out, bits, _ = self.step_up(ctx, EMPTY_STATE, payload, priors)
         return out, bits
@@ -299,8 +311,19 @@ class StatelessUplink:
 class StatelessDownlink:
     """Object shell + trivial state for downlinks without memory."""
 
+    # Downlink audience: "all" (every client holds an estimate of the
+    # broadcast) or "active" (client-specific payloads for the cohort
+    # only).  The engine's fault booking scales per-recipient bits by it.
+    downlink_recipients = "all"
+
     def init_down_state(self, n: int, d: int):
         return EMPTY_STATE
+
+    def export_state(self):
+        return EMPTY_STATE
+
+    def import_state(self, state) -> None:
+        pass
 
     def distribute(self, ctx, update, theta, theta_hat):
         res, _ = self.step_down(ctx, EMPTY_STATE, update, theta, theta_hat)
@@ -706,6 +729,7 @@ class MRCPrivateDownlink(StatelessDownlink):
     logw_fn: Any = None
     seg_logw_fn: Any = None
     broadcast_shareable: bool = False
+    downlink_recipients = "active"  # client-specific payloads, cohort only
 
     def _transmit(self, ctx, update, theta_hat):
         kt, plan, d = ctx.key, ctx.plan, ctx.d
@@ -984,6 +1008,7 @@ class SignEFChannel:
 
     passes: int = 1
     broadcast_shareable: bool = True
+    downlink_recipients = "all"
     _e: Optional[jax.Array] = field(default=None, repr=False)
 
     def _compress_passes(self, v):
@@ -1145,6 +1170,12 @@ class SignEFChannel:
         rows = [wcodecs.get_dense(_wire_reader(m), d) for m in msgs]
         return jnp.mean(jnp.asarray(np.stack(rows)), axis=0)
 
+    def export_state(self):
+        return self._e
+
+    def import_state(self, state) -> None:
+        self._e = state
+
     def reset(self):
         self._e = None
 
@@ -1236,6 +1267,12 @@ class TopKEFChannel:
     def decode_flush_up(self, msgs, n, d):
         rows = [wcodecs.get_dense(_wire_reader(m), d) for m in msgs]
         return jnp.mean(jnp.asarray(np.stack(rows)), axis=0)
+
+    def export_state(self):
+        return self._e
+
+    def import_state(self, state) -> None:
+        self._e = state
 
     def reset(self):
         self._e = None

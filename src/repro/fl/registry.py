@@ -232,3 +232,41 @@ def wire_scheme_ids(*, n: int = 4, d: int = 64) -> Dict[str, int]:
         by_id[wid] = name
         ids[name] = wid
     return ids
+
+
+def fault_matrix(*, n: int, d: int, n_is: int = 16, block: int = 64,
+                 n_dl: int = None, reset_period: int = 2):
+    """One scheme per uplink channel family, for fault-injection sweeps.
+
+    The fault machinery's degradation paths split by channel *family*
+    (MRC index streams, quantized-MRC deltas, sign-EF, top-k EF, dense),
+    not by scheme, so the CI fault matrix and the robustness tests cover
+    each family once instead of re-running the full registry:
+
+    * ``bicompfl-pr``  -- MRC fixed-block uplink + client-specific
+      (``downlink_recipients="active"``) MRC private downlink;
+    * ``bicompfl-cfl`` -- quantized-MRC delta uplink, broadcast downlink;
+    * ``doublesqueeze`` -- sign compression with error feedback on both
+      links (EF rows must be carried for dropped clients);
+    * ``m3``           -- top-k EF uplink (index payloads of varying
+      width; excluded from uniform per-client wire-bit assertions);
+    * ``fedavg``       -- dense float uplink, the no-compression control.
+
+    Same ``(name, task_kind, factory)`` triples as :func:`all_schemes`.
+    """
+    ndl = n if n_dl is None else n_dl
+    return [
+        ("bicompfl-pr", "mask",
+         lambda: bicompfl_spec("PR", allocation=FixedAllocation(block),
+                               n_is=n_is, n_dl=ndl)),
+        ("bicompfl-cfl", "delta",
+         lambda: cfl_spec(n_is=n_is, block_size=16)),
+        ("doublesqueeze", "delta",
+         lambda: baseline_spec("doublesqueeze", n=n, d=d,
+                               reset_period=reset_period)),
+        ("m3", "delta",
+         lambda: baseline_spec("m3", n=n, d=d, reset_period=reset_period)),
+        ("fedavg", "delta",
+         lambda: baseline_spec("fedavg", n=n, d=d,
+                               reset_period=reset_period)),
+    ]

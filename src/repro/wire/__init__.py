@@ -17,13 +17,15 @@ from __future__ import annotations
 
 import zlib
 
-from .bitio import BitReader, BitWriter, WireFormatError  # noqa: F401
+from .bitio import (BitReader, BitWriter, WireError,  # noqa: F401
+                    WireFormatError, WireIntegrityError)
 from .codecs import WireCapacityError  # noqa: F401
 from .frame import (DIR_CTRL, DIR_DOWN, DIR_FLUSH_DOWN,  # noqa: F401
                     DIR_FLUSH_UP, DIR_UP, DOWNLINK_DIRS,
-                    FRAME_HEADER_BITS, MAGIC, Message, RECONCILE_REL_TOL,
+                    FRAME_HEADER_BITS, FRAME_OVERHEAD_BITS,
+                    FRAME_TRAILER_BITS, MAGIC, Message, RECONCILE_REL_TOL,
                     RECONCILE_TOL_BITS, SERVER, UPLINK_DIRS, VERSION,
-                    WireSession)
+                    WastedAttempt, WireSession)
 
 
 def scheme_wire_id(name: str) -> int:

@@ -10,14 +10,35 @@ bit-exact by construction, never a decimal detour.
 Both ends count bits (``bits_written`` / ``bits_read``) so codecs can be
 audited against :class:`repro.core.bitmeter.BitMeter` bookings, and both
 support byte alignment (``align``) for framing payload boundaries.
+
+Error taxonomy (all subclasses of :class:`WireError`, itself a ValueError
+so pre-existing ``except ValueError`` call sites keep working):
+
+* :class:`WireFormatError`   -- structurally malformed data: bad magic,
+  overrunning reads (truncation), nonzero padding, out-of-contract widths;
+* :class:`WireIntegrityError` -- structurally sound but corrupted in
+  flight: the frame CRC32 trailer does not match the received bytes.
+
+Anything raised while parsing wire bytes is a ``WireError`` -- never a bare
+``IndexError`` or struct noise -- so retry loops can catch one type.
 """
 from __future__ import annotations
+
+import zlib
 
 import numpy as np
 
 
-class WireFormatError(ValueError):
+class WireError(ValueError):
+    """Base class: anything wrong with data on (or for) the wire."""
+
+
+class WireFormatError(WireError):
     """Malformed or out-of-contract wire data (loud by design)."""
+
+
+class WireIntegrityError(WireError):
+    """Frame failed its CRC32 integrity check: corrupted in flight."""
 
 
 class BitWriter:
@@ -84,6 +105,21 @@ class BitWriter:
         if pad:
             self.write(0, pad)
         return pad
+
+    @property
+    def byte_offset(self) -> int:
+        """Current write position in whole bytes (must be byte-aligned)."""
+        if self._nacc:
+            raise WireFormatError(
+                f"byte_offset taken mid-byte ({self._nacc} pending bits)")
+        return len(self._bytes)
+
+    def crc32(self, start_byte: int) -> int:
+        """CRC32 of the bytes written since ``start_byte`` (aligned span)."""
+        if self._nacc:
+            raise WireFormatError(
+                f"crc32 taken mid-byte ({self._nacc} pending bits)")
+        return zlib.crc32(memoryview(self._bytes)[start_byte:]) & 0xFFFFFFFF
 
     def getvalue(self) -> bytes:
         """The stream so far, zero-padded to whole bytes (non-destructive)."""
@@ -178,6 +214,15 @@ class BitReader:
         pad = (-self._pos) % 8
         if pad and self.read(pad) != 0:
             raise WireFormatError("nonzero alignment padding")
+
+    def crc32(self, start_byte: int, end_byte: int) -> int:
+        """CRC32 of the underlying bytes in ``[start_byte, end_byte)``."""
+        if not 0 <= start_byte <= end_byte <= len(self._data):
+            raise WireFormatError(
+                f"crc32 span [{start_byte}, {end_byte}) outside "
+                f"{len(self._data)}-byte stream")
+        return zlib.crc32(memoryview(self._data)[start_byte:end_byte]) \
+            & 0xFFFFFFFF
 
     def expect_exhausted(self) -> None:
         if self.bits_left:

@@ -1,0 +1,174 @@
+"""Checkpoint robustness: atomic writes, self-describing load, corrupt-file
+skipping, and the per-step directory protocol the FL engine's
+``resume_from=`` builds on (DESIGN.md §8, "Crash-safe resume")."""
+import os
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+
+
+def _tree():
+    return {
+        "theta": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "nested": {"b": np.float64(2.5), "a": np.int32(7)},
+        "seq": [np.ones(2, np.float32), (np.zeros((), np.int64), None)],
+    }
+
+
+def _assert_tree_equal(a, b):
+    if isinstance(a, dict):
+        assert set(a) == set(b)
+        for k in a:
+            _assert_tree_equal(a[k], b[k])
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            _assert_tree_equal(x, y)
+    elif a is None:
+        assert b is None
+    else:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestSelfDescribingLoad:
+
+    def test_roundtrip_without_reference_tree(self, tmp_path):
+        path = str(tmp_path / "c.repro")
+        ckpt.save(path, _tree(), step=3)
+        tree, step = ckpt.load(path)
+        assert step == 3
+        _assert_tree_equal(tree, _tree())
+
+    def test_non_alphabetical_dict_keys_rebuild_unscrambled(self, tmp_path):
+        """jax.tree.leaves flattens dicts sorted by key; a descriptor
+        emitted in insertion order would rebuild ``z``/``a`` swapped."""
+        path = str(tmp_path / "c.repro")
+        src = {"z": np.full(3, 1.0, np.float32),
+               "a": np.full(3, 2.0, np.float32)}
+        ckpt.save(path, src)
+        tree, _ = ckpt.load(path)
+        _assert_tree_equal(tree, src)
+
+    def test_scalar_bit_exact(self, tmp_path):
+        path = str(tmp_path / "c.repro")
+        ckpt.save(path, {"x": 0.1, "n": 123456789})
+        tree, _ = ckpt.load(path)
+        assert float(tree["x"]) == 0.1 and int(tree["n"]) == 123456789
+
+    def test_jax_arrays_roundtrip(self, tmp_path):
+        path = str(tmp_path / "c.repro")
+        src = {"w": jnp.linspace(0, 1, 7, dtype=jnp.float32)}
+        ckpt.save(path, src)
+        tree, _ = ckpt.load(path)
+        np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                      np.asarray(src["w"]))
+
+
+class TestAtomicSave:
+
+    def test_no_temp_residue(self, tmp_path):
+        path = str(tmp_path / "c.repro")
+        ckpt.save(path, _tree())
+        assert os.listdir(tmp_path) == ["c.repro"]
+
+    def test_overwrite_is_replace_not_append(self, tmp_path):
+        path = str(tmp_path / "c.repro")
+        ckpt.save(path, {"a": np.zeros(1000, np.float64)})
+        big = os.path.getsize(path)
+        ckpt.save(path, {"a": np.zeros(1, np.float64)})
+        assert os.path.getsize(path) < big
+        tree, _ = ckpt.load(path)
+        assert tree["a"].shape == (1,)
+
+    def test_creates_parent_directory(self, tmp_path):
+        path = str(tmp_path / "deep" / "er" / "c.repro")
+        ckpt.save(path, _tree())
+        assert ckpt.validate(path)[0]
+
+
+class TestCorruptionHandling:
+
+    def _saved(self, tmp_path, step=5):
+        path = str(tmp_path / "c.repro")
+        ckpt.save(path, _tree(), step=step)
+        return path
+
+    def test_validate_ok(self, tmp_path):
+        ok, step, reason = ckpt.validate(self._saved(tmp_path))
+        assert ok and step == 5 and reason == ""
+
+    def test_bad_magic(self, tmp_path):
+        path = self._saved(tmp_path)
+        data = open(path, "rb").read()
+        open(path, "wb").write(b"NOTACKPT??" + data[10:])
+        ok, _, reason = ckpt.validate(path)
+        assert not ok and "magic" in reason
+        with pytest.raises(ckpt.CheckpointError):
+            ckpt.load(path)
+
+    def test_truncated_payload(self, tmp_path):
+        path = self._saved(tmp_path)
+        data = open(path, "rb").read()
+        open(path, "wb").write(data[:-4])
+        ok, step, reason = ckpt.validate(path)
+        assert not ok and "truncated" in reason and step == 5
+        with pytest.raises(ckpt.CheckpointError):
+            ckpt.load(path)
+
+    def test_garbled_header(self, tmp_path):
+        path = self._saved(tmp_path)
+        data = bytearray(open(path, "rb").read())
+        hdr_at = len(ckpt.MAGIC) + 8
+        data[hdr_at] ^= 0xFF  # breaks the JSON
+        open(path, "wb").write(bytes(data))
+        ok, _, reason = ckpt.validate(path)
+        assert not ok
+
+    def test_latest_step_warns_and_skips_corrupt(self, tmp_path):
+        path = self._saved(tmp_path)
+        open(path, "wb").write(b"garbage")
+        with pytest.warns(RuntimeWarning, match="corrupt"):
+            assert ckpt.latest_step(path) is None
+
+    def test_latest_step_missing_file_is_quietly_none(self, tmp_path):
+        assert ckpt.latest_step(str(tmp_path / "absent.repro")) is None
+
+
+class TestStepDirectory:
+
+    def test_latest_picks_newest_valid(self, tmp_path):
+        d = str(tmp_path)
+        for s in (2, 4, 6):
+            ckpt.save_step(d, {"s": np.int64(s)}, s)
+        path, step = ckpt.latest(d)
+        assert step == 6 and path == ckpt.step_path(d, 6)
+        tree, hdr_step = ckpt.load(path)
+        assert int(tree["s"]) == 6 and hdr_step == 6
+
+    def test_latest_skips_torn_newest(self, tmp_path):
+        """A crash mid-write of step 6 must fall back to step 4."""
+        d = str(tmp_path)
+        for s in (2, 4, 6):
+            ckpt.save_step(d, {"s": np.zeros(64, np.float64)}, s)
+        p6 = ckpt.step_path(d, 6)
+        data = open(p6, "rb").read()
+        open(p6, "wb").write(data[: len(data) // 2])
+        with pytest.warns(RuntimeWarning, match="corrupt"):
+            path, step = ckpt.latest(d)
+        assert step == 4 and path == ckpt.step_path(d, 4)
+
+    def test_empty_or_missing_directory(self, tmp_path):
+        assert ckpt.latest(str(tmp_path)) == (None, None)
+        assert ckpt.latest(str(tmp_path / "nope")) == (None, None)
+
+    def test_foreign_files_ignored(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save_step(d, {"s": np.int64(1)}, 1)
+        open(os.path.join(d, "notes.txt"), "w").write("hi")
+        open(os.path.join(d, "ckpt_zzz.tmp"), "w").write("partial")
+        path, step = ckpt.latest(d)
+        assert step == 1

@@ -47,7 +47,8 @@ from repro.fl.engine import EngineSpec, FLEngine, MeanDeltaAggregator
 from repro.fl.nets import make_mlp
 from repro.fl.tasks import make_cfl_task, make_mask_task
 from repro.wire import (DIR_CTRL, DIR_DOWN, DIR_FLUSH_DOWN, DIR_FLUSH_UP,
-                        DIR_UP, DOWNLINK_DIRS, FRAME_HEADER_BITS, MAGIC,
+                        DIR_UP, DOWNLINK_DIRS, FRAME_HEADER_BITS,
+                        FRAME_OVERHEAD_BITS, FRAME_TRAILER_BITS, MAGIC,
                         RECONCILE_REL_TOL, RECONCILE_TOL_BITS, SERVER,
                         UPLINK_DIRS, VERSION, BitReader, BitWriter, Message,
                         WireCapacityError, WireFormatError, WireSession,
@@ -272,7 +273,9 @@ class TestCodecs:
 class TestFraming:
     def test_header_width_is_pinned(self):
         assert FRAME_HEADER_BITS == 144
-        assert MAGIC == 0xB1C0 and VERSION == 1
+        assert FRAME_TRAILER_BITS == 32
+        assert FRAME_OVERHEAD_BITS == 144 + 32 == 176
+        assert MAGIC == 0xB1C0 and VERSION == 2
 
     def test_message_roundtrip(self):
         m = Message(direction=DIR_UP, sender=2, recipient=SERVER,
@@ -280,7 +283,7 @@ class TestFraming:
                     scheme_id=0x1234)
         w = BitWriter()
         m.write_to(w)
-        assert w.bits_written == m.frame_bits == FRAME_HEADER_BITS + 16
+        assert w.bits_written == m.frame_bits == FRAME_OVERHEAD_BITS + 16
         m2 = Message.read_from(BitReader(w.getvalue(), w.bits_written))
         assert m2 == m
 
@@ -311,8 +314,8 @@ class TestFraming:
                  m.payload) for m in s.messages]
         assert s.uplink_payload_bits == 5
         assert s.downlink_payload_bits == 24
-        assert s.stream_bits == 3 * FRAME_HEADER_BITS + 8 + 8 + 24
-        lo = 3 * FRAME_HEADER_BITS
+        assert s.stream_bits == 3 * FRAME_OVERHEAD_BITS + 8 + 8 + 24
+        lo = 3 * FRAME_OVERHEAD_BITS
         assert lo <= s.framing_bits <= lo + 3 * 7
 
     def test_parse_rejects_bad_magic_and_version(self):
@@ -341,8 +344,8 @@ class TestReconcile:
         return m
 
     def test_exact_match_passes(self):
-        rep = self._meter().reconcile(1000, 500, framing_bits=2 * 144,
-                                      n_messages=2, frame_header_bits=144)
+        rep = self._meter().reconcile(1000, 500, framing_bits=2 * 176,
+                                      n_messages=2, frame_overhead_bits=176)
         assert rep["uplink_err_bits"] == 0.0
         assert rep["downlink_err_bits"] == 0.0
 
@@ -361,11 +364,11 @@ class TestReconcile:
     def test_framing_envelope_raises(self):
         with pytest.raises(ReconcileError, match="framing"):
             self._meter().reconcile(1000, 500, framing_bits=10.0,
-                                    n_messages=2, frame_header_bits=144)
+                                    n_messages=2, frame_overhead_bits=176)
         with pytest.raises(ReconcileError, match="framing"):
             self._meter().reconcile(1000, 500,
-                                    framing_bits=2 * (144 + 7) + 1,
-                                    n_messages=2, frame_header_bits=144)
+                                    framing_bits=2 * (176 + 7) + 1,
+                                    n_messages=2, frame_overhead_bits=176)
 
     def test_session_reconcile_is_loud(self):
         s = WireSession(scheme_id=1)
@@ -693,7 +696,7 @@ def test_golden_wire_file_is_stable():
     """The serialized byte stream is the format contract.  A mismatch means
     the wire layout changed: bump VERSION, document the change in
     DESIGN.md, and regenerate with ``REGEN_GOLDEN=1 pytest -k golden``."""
-    path = GOLDEN / "wire_session_v1.bin"
+    path = GOLDEN / "wire_session_v2.bin"
     data = _golden_session().to_bytes()
     if os.environ.get("REGEN_GOLDEN"):
         GOLDEN.mkdir(exist_ok=True)
@@ -738,4 +741,6 @@ def test_design_doc_pins_the_tolerance_contract():
     assert documented("FRAME_HEADER_BITS") == FRAME_HEADER_BITS == 144
     assert documented("RECONCILE_TOL_BITS") == RECONCILE_TOL_BITS == 0.0
     assert documented("RECONCILE_REL_TOL") == RECONCILE_REL_TOL == 1e-9
-    assert documented("WIRE_VERSION") == VERSION == 1
+    assert documented("WIRE_VERSION") == VERSION == 2
+    assert documented("FRAME_TRAILER_BITS") == FRAME_TRAILER_BITS == 32
+    assert documented("FRAME_OVERHEAD_BITS") == FRAME_OVERHEAD_BITS == 176
